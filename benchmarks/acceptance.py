@@ -1,0 +1,64 @@
+"""Paper Fig. 7 + Table IV — acceptance rate vs compression ratio.
+
+Sweeps value pruning (VP), mantissa truncation (MT) and the combined
+VP+MT configuration (the paper's key Fig. 7 claim: the combination is
+robust where either alone collapses), plus Table IV-style per-model
+acceptance at the default (40%, 4-bit) on every smoke arch.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.format import CassandraConfig
+from benchmarks import common
+
+
+def sweep(print_fn=print):
+    cfg, params = common.trained_smoke_model()
+    rows = []
+    # VP-only, MT-only, VP+MT at matched draft ratios
+    grid = [
+        ("VP", dict(weight_prune=0.6, weight_trunc=0, kv_prune=0.6,
+                    kv_trunc=0)),
+        ("MT", dict(weight_prune=0.0, weight_trunc=5, kv_prune=0.0,
+                    kv_trunc=5)),
+        ("VP+MT", dict(weight_prune=0.4, weight_trunc=4, kv_prune=0.4,
+                       kv_trunc=4)),
+        ("VP+MT-light", dict(weight_prune=0.3, weight_trunc=2, kv_prune=0.3,
+                             kv_trunc=2)),
+        ("VP+MT-heavy", dict(weight_prune=0.6, weight_trunc=5, kv_prune=0.6,
+                             kv_trunc=5)),
+    ]
+    for name, kw in grid:
+        cass = CassandraConfig(variant=1, **kw)
+        stats = common.measure_acceptance(cfg, params, cass, gamma=5)
+        ratio = ((1 - kw["weight_prune"])
+                 * (16 - kw["weight_trunc"] - 5) + 1) / 16  # rough draft bits
+        rows.append((name, stats["acceptance"], ratio))
+        print_fn(f"acceptance,{name},{stats['acceptance']:.3f},"
+                 f"tokens_per_cycle={stats['tokens_per_cycle']:.2f}")
+    return rows
+
+
+def per_model(print_fn=print, archs=("llama3-8b", "qwen3-4b", "qwen3-1.7b")):
+    rows = []
+    for arch in archs:
+        cfg, params = common.trained_smoke_model(arch)
+        for variant, gamma in ((1, 5), (2, 3)):
+            cass = CassandraConfig(variant=variant, gamma=gamma)
+            stats = common.measure_acceptance(cfg, params, cass, gamma=gamma)
+            rows.append((arch, variant, stats["acceptance"]))
+            print_fn(f"acceptance,{arch},C{variant},"
+                     f"{stats['acceptance']:.3f}")
+    return rows
+
+
+def run(print_fn=print):
+    return sweep(print_fn) + per_model(print_fn)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true")
+    args = ap.parse_args()
+    (sweep if args.sweep else run)()

@@ -1,0 +1,115 @@
+"""Paper Table III proxy — lossless vs lossy output fidelity.
+
+The paper's Table III runs GPQA/Math-500/AIME on 4–8B checkpoints; at
+smoke scale we measure the mechanisms those numbers come from:
+
+* greedy-output agreement with the bf16 model (Cassandra-1 must be 1.0 —
+  the lossless headline; lossy deployment of the same compression drops),
+* eval-set perplexity delta.
+
+The "lossy" rows deploy the *draft* model directly as the serving model
+(densified Wanda-pruned + truncated weights — what lossy compression does);
+the Cassandra rows run the full speculative pipeline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.format import CassandraConfig
+from repro.models import loss_fn
+from repro.models.layers import Runtime, is_packed, packed_shape
+from repro.core.format import draft_weight
+from repro.serving.engine import Engine, EngineConfig
+from benchmarks import common
+
+
+def materialize_draft(packed, cass):
+    """Densify the draft view into a plain params tree (lossy deployment)."""
+    import jax
+
+    def walk(node):
+        if isinstance(node, dict):
+            if is_packed(node):
+                shape = packed_shape(node)
+                if node["spec"]["bitmap"].ndim == 4:     # stacked (R,…)
+                    return jax.vmap(
+                        lambda s: draft_weight(s, cass, shape)
+                    )(node["spec"])
+                return draft_weight(node["spec"], cass, shape)
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+    return walk(packed)
+
+
+def _ppl(cfg, params, cass, view):
+    rt = Runtime(cfg=cfg, cass=cass, view=view, ssm_chunk=8)
+    from repro.data import DataConfig, synthetic_batches
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=common.SEQ,
+                      global_batch=8, seed=77, frontend=cfg.frontend,
+                      frontend_tokens=cfg.frontend_tokens,
+                      d_model=cfg.d_model)
+    _, batch = next(iter(synthetic_batches(dcfg, start_step=5000)))
+    loss, _ = loss_fn(rt, params, batch)
+    return float(jnp.exp(loss))
+
+
+def _greedy_tokens(cfg, params, cass, max_new=24, speculative=False):
+    eng = Engine(cfg, params, cass=cass, ecfg=EngineConfig(gamma=3),
+                 rt_extra={"ssm_chunk": 8})
+    toks, _ = eng.generate(common.eval_prompts(cfg, n=2), max_new=max_new,
+                           speculative=speculative)
+    return [r[r >= 0][:max_new] for r in np.asarray(toks)]
+
+
+def _agreement(a, b):
+    agree = total = 0
+    for ra, rb in zip(a, b):
+        n = min(len(ra), len(rb))
+        agree += int((ra[:n] == rb[:n]).sum())
+        total += n
+    return agree / max(total, 1)
+
+
+def run(print_fn=print):
+    cfg, params = common.trained_smoke_model()
+    base_tokens = _greedy_tokens(cfg, params, None)
+    base_ppl = _ppl(cfg, params, None, "plain")
+    rows = [("bf16", 1.0, base_ppl)]
+    print_fn(f"accuracy,bf16,agreement=1.000,ppl={base_ppl:.3f}")
+
+    cass = CassandraConfig(variant=1)
+    packed = common.calibrated_format(cfg, params, cass)
+
+    # lossy deployment: densified draft weights as the serving model
+    lossy_params = materialize_draft(packed, cass)
+    lossy_tokens = _greedy_tokens(cfg, lossy_params, None)
+    agr = _agreement(base_tokens, lossy_tokens)
+    ppl = _ppl(cfg, lossy_params, None, "plain")
+    rows.append(("wanda+trunc-lossy", agr, ppl))
+    print_fn(f"accuracy,wanda+trunc-lossy,agreement={agr:.3f},"
+             f"ppl={ppl:.3f}")
+
+    # Cassandra-1: full speculative pipeline — exact by construction
+    spec_tokens = _greedy_tokens(cfg, packed, cass, speculative=True)
+    agr1 = _agreement(base_tokens, spec_tokens)
+    ppl1 = _ppl(cfg, packed, cass, "target")
+    rows.append(("cassandra-1", agr1, ppl1))
+    print_fn(f"accuracy,cassandra-1,agreement={agr1:.3f},ppl={ppl1:.3f}")
+
+    # Cassandra-2 (MX target container): near-exact
+    cass2 = CassandraConfig(variant=2)
+    packed2 = common.calibrated_format(cfg, params, cass2)
+    spec2 = _greedy_tokens(cfg, packed2, cass2, speculative=True)
+    agr2 = _agreement(base_tokens, spec2)
+    ppl2 = _ppl(cfg, packed2, cass2, "target")
+    rows.append(("cassandra-2", agr2, ppl2))
+    print_fn(f"accuracy,cassandra-2,agreement={agr2:.3f},ppl={ppl2:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

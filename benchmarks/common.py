@@ -1,0 +1,123 @@
+"""Shared benchmark utilities: a briefly-trained smoke model + acceptance
+measurement.
+
+Random-init weights have no magnitude structure, so acceptance-rate
+benchmarks use a model trained a few hundred steps on the deterministic
+synthetic corpus (cached in /tmp). The numbers are proxies — the paper
+measures trained 4–8B checkpoints — but the *relative* curves (VP vs MT vs
+VP+MT, C-1 vs C-2, γ sweeps) reproduce the paper's qualitative claims.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.core.format import CassandraConfig
+from repro.core.packing import Calibrator, format_params
+from repro.data import DataConfig, synthetic_batches
+from repro.models import init_params, forward_train
+from repro.models.layers import Runtime
+from repro.serving.engine import Engine, EngineConfig
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench")
+SEQ = 64
+BATCH = 8
+
+
+def trained_smoke_model(arch: str = "llama3-8b", steps: int = 300,
+                        seed: int = 0):
+    """(cfg, params) for a smoke config trained ``steps`` on synthetic data."""
+    from repro.training import OptConfig, init_opt_state, train_step
+    from repro.training.trainer import TrainConfig
+
+    cfg = get_config(arch, smoke=True)
+    ckpt_dir = os.path.join(CACHE_DIR, f"{arch}-s{steps}-seed{seed}")
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    last = latest_step(ckpt_dir)
+    if last == steps:
+        return cfg, restore_checkpoint(ckpt_dir, steps, params)
+
+    rt = Runtime(cfg=cfg, ssm_chunk=8)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, total_steps=steps,
+                                     warmup_steps=20))
+    opt_state = init_opt_state(params, tcfg.opt)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                      global_batch=BATCH, seed=seed, frontend=cfg.frontend,
+                      frontend_tokens=cfg.frontend_tokens,
+                      d_model=cfg.d_model)
+    step_fn = jax.jit(lambda p, o, b: train_step(rt, p, o, b, tcfg),
+                      donate_argnums=(0, 1))
+    for step, batch in synthetic_batches(dcfg):
+        if step >= steps:
+            break
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    save_checkpoint(ckpt_dir, steps, params)
+    return cfg, params
+
+
+def eval_prompts(cfg, n: int = 4, seed: int = 7) -> dict:
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                      global_batch=n, seed=seed, frontend=cfg.frontend,
+                      frontend_tokens=cfg.frontend_tokens,
+                      d_model=cfg.d_model)
+    _, batch = next(iter(synthetic_batches(dcfg, start_step=12345)))
+    prompt = {"tokens": batch["tokens"][:, :24]}
+    for k in ("patch_embeds", "frame_embeds"):
+        if k in batch:
+            prompt[k] = batch[k]
+    return prompt
+
+
+def calibrated_format(cfg, params, cass: CassandraConfig, calibrate=True):
+    calib = None
+    if calibrate:
+        calib = Calibrator()
+        rt = Runtime(cfg=cfg, collector=calib, ssm_chunk=8)
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                          global_batch=4, seed=3, frontend=cfg.frontend,
+                          frontend_tokens=cfg.frontend_tokens,
+                          d_model=cfg.d_model)
+        _, batch = next(iter(synthetic_batches(dcfg, start_step=999)))
+        forward_train(rt, params, batch)
+    return format_params(params, cass, calib=calib)
+
+
+def measure_acceptance(cfg, params, cass: CassandraConfig, gamma: int = 5,
+                       max_new: int = 24, n_prompts: int = 4,
+                       calibrate: bool = True) -> dict:
+    packed = calibrated_format(cfg, params, cass, calibrate)
+    eng = Engine(cfg, packed, cass=cass,
+                 ecfg=EngineConfig(gamma=gamma, greedy=True),
+                 rt_extra={"ssm_chunk": 8})
+    prompt = eval_prompts(cfg, n=n_prompts)
+    _, stats = eng.generate(prompt, max_new=max_new, speculative=True)
+    return stats
+
+
+def greedy_agreement(cfg, params_a, params_b, cass_a, cass_b,
+                     max_new: int = 24) -> float:
+    """Fraction of greedy tokens that agree between two model variants."""
+    outs = []
+    for params, cass in ((params_a, cass_a), (params_b, cass_b)):
+        eng = Engine(cfg, params, cass=cass, ecfg=EngineConfig(gamma=2),
+                     rt_extra={"ssm_chunk": 8})
+        toks, _ = eng.generate(eval_prompts(cfg, n=2), max_new=max_new,
+                               speculative=cass is not None)
+        rows = []
+        for r in np.asarray(toks):
+            seq = r[r >= 0][:max_new]
+            rows.append(seq)
+        outs.append(rows)
+    agree = total = 0
+    for ra, rb in zip(*outs):
+        n = min(len(ra), len(rb))
+        agree += int((ra[:n] == rb[:n]).sum())
+        total += n
+    return agree / max(total, 1)

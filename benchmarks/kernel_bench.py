@@ -1,0 +1,81 @@
+"""Kernel accounting (paper Table V analogue on TPU).
+
+ASIC area/power don't transfer; the TPU-meaningful costs are the VMEM
+working set and decode-FLOP overhead of each Pallas kernel per superblock
+tile, plus interpret-mode correctness spot checks and a CPU wall-clock of
+kernel-vs-oracle (informative only — interpret mode is a Python loop).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.format import CassandraConfig, format_weight
+from repro.kernels import ops
+
+
+def vmem_accounting(print_fn=print):
+    cass = CassandraConfig(variant=1)
+    block, keep, trunc = 512, 320, 4
+    tn, tm = 128, 128
+    t_keep = 7 - trunc
+    rows = []
+    # per-(tm,tn,block) grid step
+    operands = {
+        "x_tile": tm * block * 2,
+        "bitmap": tn * block // 8,
+        "signmant": tn * ((keep * (1 + t_keep) + 31) // 32) * 4,
+        "exp3": tn * ((keep * 3 + 31) // 32) * 4,
+        "emax+book": tn * 4 + 32,
+        "out_acc": tm * tn * 4,
+    }
+    packed_w_bytes = sum(v for k, v in operands.items()
+                         if k not in ("x_tile", "out_acc"))
+    dense_w_bytes = tn * block * 2
+    total = sum(operands.values())
+    decode_flops = tn * block * 6          # shifts/cmp/select per value
+    mxu_flops = 2 * tm * tn * block
+    for k, v in operands.items():
+        print_fn(f"kernel_vmem,draft_matmul,{k},{v}B")
+    print_fn(f"kernel_vmem,draft_matmul,total,{total}B "
+             f"(vs 16MB VMEM: {total/16e6*100:.1f}%)")
+    print_fn(f"kernel_bytes,draft_matmul,packed_vs_dense,"
+             f"{packed_w_bytes}/{dense_w_bytes}="
+             f"{packed_w_bytes/dense_w_bytes:.3f}")
+    print_fn(f"kernel_flops,draft_matmul,decode_overhead,"
+             f"{decode_flops/mxu_flops*100:.1f}% of MXU work")
+    rows.append(("draft_matmul_vmem", total))
+    return rows
+
+
+def wallclock(print_fn=print):
+    cass = CassandraConfig(variant=1)
+    shape = (512, 128)
+    w = (jax.random.normal(jax.random.PRNGKey(0), shape)
+         ).astype(jnp.bfloat16)
+    spec, _ = format_weight(w, None, cass)
+    x = (jax.random.normal(jax.random.PRNGKey(1), (8, shape[0]))
+         ).astype(jnp.bfloat16)
+    from repro.kernels import ref
+    for name, fn in (
+            ("interpret", lambda: ops.draft_matmul(x, spec, cass, shape,
+                                                   interpret=True)),
+            ("jnp_oracle", lambda: ref.draft_matmul_ref(x, spec, cass,
+                                                        shape))):
+        fn()  # warm
+        t0 = time.time()
+        for _ in range(3):
+            jax.block_until_ready(fn())
+        dt = (time.time() - t0) / 3
+        print_fn(f"kernel_wall,draft_matmul,{name},{dt*1e3:.1f}ms")
+    return []
+
+
+def run(print_fn=print):
+    return vmem_accounting(print_fn) + wallclock(print_fn)
+
+
+if __name__ == "__main__":
+    run()

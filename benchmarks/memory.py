@@ -1,0 +1,57 @@
+"""Paper Fig. 14 — memory capacity: max generatable tokens per budget.
+
+Tokens(budget) = (budget - resident_weight_bytes) / kv_bytes_per_token for
+each decoding scheme. Cassandra's resident form is *below* bf16 (lossless
+exponent coding on both partitions), vanilla speculative decoding adds a
+separate draft model, Eagle-3 adds a draft head (~1 extra layer + vocab
+head).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.format import CassandraConfig
+from benchmarks.perf_model import kv_bytes, weight_bytes
+
+BUDGET = 24e9        # 24 GB edge-device budget (RTX 4090)
+
+
+def tokens_under_budget(w_resident, kv_per_token, budget=BUDGET):
+    return max(budget - w_resident, 0.0) / max(kv_per_token, 1e-9)
+
+
+def run(print_fn=print, arch="llama3-8b"):
+    cfg = get_config(arch)
+    rows = []
+    kv_tok_bf16, _ = kv_bytes(cfg, None, 1)
+    w_bf16, _ = weight_bytes(cfg, None)
+    emb = cfg.vocab_size * cfg.d_model * 2
+
+    schemes = {}
+    schemes["autoregressive-bf16"] = (w_bf16 + emb, kv_tok_bf16)
+    # vanilla 2-model spec: +1B-class draft (1/8 of target) + its KV
+    schemes["spec-2model"] = (1.125 * (w_bf16 + emb), 1.125 * kv_tok_bf16)
+    # eagle-3: one extra decode layer + head re-using target KV
+    head = (cfg.d_model * cfg.vocab_size + 12 * cfg.d_model ** 2) * 2
+    schemes["eagle-3"] = (w_bf16 + emb + head, kv_tok_bf16 * 33 / 32)
+    cass = CassandraConfig(variant=1)
+    _, w_res = weight_bytes(cfg, cass)
+    kv_spec, kv_res = kv_bytes(cfg, cass, 1)
+    schemes["cassandra-1"] = (w_res + emb, kv_res)
+
+    base = None
+    for name, (w, kvt) in schemes.items():
+        toks = tokens_under_budget(w, kvt)
+        if name == "spec-2model":
+            base = toks
+        rows.append((name, w, kvt, toks))
+        print_fn(f"memory,{name},resident={w/1e9:.2f}GB,"
+                 f"kv_per_tok={kvt/1e3:.1f}KB,max_tokens={toks/1e3:.0f}k")
+    cass_toks = rows[-1][3]
+    eagle_toks = rows[2][3]
+    print_fn(f"memory,ratio_vs_2model,{cass_toks/max(base,1):.2f}x")
+    print_fn(f"memory,ratio_vs_eagle3,{cass_toks/max(eagle_toks,1):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,99 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from results/.
+
+  PYTHONPATH=src python benchmarks/report.py > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "results")
+
+
+def _load(sub):
+    out = {}
+    for f in glob.glob(f"{RESULTS}/{sub}/*.json"):
+        name = os.path.basename(f)[:-5]
+        arch, shape = name.rsplit("_", 1)
+        try:
+            out[(arch, shape)] = json.load(open(f))
+        except json.JSONDecodeError:
+            out[(arch, shape)] = {"ok": False, "error": "unreadable"}
+    return out
+
+
+def _fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(x) >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_table():
+    for tag, sub in (("16x16 (256 chips)", "dryrun"),
+                     ("2x16x16 (512 chips)", "dryrun_mp")):
+        rows = _load(sub)
+        print(f"\n### Mesh {tag}\n")
+        print("| arch | shape | compile | args/dev | temp/dev | "
+              "collective ops | status |")
+        print("|---|---|---|---|---|---|---|")
+        for (arch, shape), d in sorted(rows.items()):
+            if not d.get("ok"):
+                print(f"| {arch} | {shape} | — | — | — | — | "
+                      f"FAIL: {str(d.get('error'))[:60]} |")
+                continue
+            pd = d["per_device"]
+            nc = sum(d["collectives"]["count_by_kind"].values())
+            print(f"| {arch} | {shape} | {d['compile_s']:.0f}s "
+                  f"| {_fmt_b(pd['argument_bytes'])} "
+                  f"| {_fmt_b(pd['temp_bytes'])} "
+                  f"| {nc} | ok |")
+
+
+def roofline_table(sub="roofline", title="Cassandra-1 (single pod)"):
+    rows = _load(sub)
+    print(f"\n### Roofline — {title}\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | "
+          "bottleneck | useful/HLO flops |")
+    print("|---|---|---|---|---|---|---|")
+    agg = []
+    for (arch, shape), d in sorted(rows.items()):
+        if "roofline" not in d:
+            print(f"| {arch} | {shape} | — | — | — | FAIL | — |")
+            continue
+        r = d["roofline"]
+        print(f"| {arch} | {shape} | {r['compute_s']:.3e} "
+              f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+              f"| {d['bottleneck'].replace('_s','')} "
+              f"| {d['useful_flops_ratio']:.3f} |")
+        agg.append(((arch, shape), d))
+    return agg
+
+
+def speedup_table():
+    """Cassandra vs bf16 decode roofline (Fig. 12 at TPU scale)."""
+    cass = _load("roofline")
+    bf16 = _load("roofline_bf16")
+    print("\n### Decode: Cassandra-1 speculative vs bf16 autoregressive "
+          "(dominant-term model)\n")
+    print("| arch | shape | bf16 t/token | cass t/cycle | cycle/token "
+          "ratio | breakeven E[tok/cycle] |")
+    print("|---|---|---|---|---|---|")
+    for key in sorted(bf16):
+        if key not in cass or "roofline" not in cass[key] \
+                or "roofline" not in bf16[key]:
+            continue
+        tb = max(bf16[key]["roofline"].values())
+        tc = max(cass[key]["roofline"].values())
+        print(f"| {key[0]} | {key[1]} | {tb:.3e} | {tc:.3e} "
+              f"| {tc/tb:.2f} | {tc/tb:.2f} |")
+
+
+if __name__ == "__main__":
+    print("## §Dry-run")
+    dryrun_table()
+    print("\n## §Roofline")
+    roofline_table()
+    speedup_table()

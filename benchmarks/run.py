@@ -1,0 +1,52 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only entropy,memory,...]
+
+Prints ``table,key,value`` CSV lines per benchmark. The dry-run/roofline
+sweep (EXPERIMENTS.md §Dry-run/§Roofline) is driven separately by
+``benchmarks/sweep_driver.py`` (needs the 512-device env).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("entropy", "Fig. 6 exponent entropy / unary bits"),
+    ("acceptance", "Fig. 7 + Table IV acceptance rates"),
+    ("accuracy", "Table III lossless-vs-lossy fidelity"),
+    ("perf_model", "Fig. 12 throughput gain model"),
+    ("compare_methods", "Fig. 13 vs other speculative methods"),
+    ("memory", "Fig. 14 memory capacity"),
+    ("kernel_bench", "Table V analogue: kernel accounting"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="comma-separated benchmark names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name, desc in MODULES:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001 — keep the suite running
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Sequential dry-run + roofline sweep over all 40 assigned cells.
+
+One subprocess per cell (isolated XLA state, failures contained), results
+as JSON under results/. Phases:
+  1. single-pod (16x16) dry-run, cassandra mode — the baseline table
+  2. multi-pod (2x16x16) dry-run — proves the pod axis shards
+  3. roofline extraction (reduced-depth unrolled fits), single-pod
+  4. bf16 decode baselines (paper Fig. 12 comparison points)
+
+Usage: PYTHONPATH=src python benchmarks/sweep_driver.py [--phase N] [--only arch]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "results")
+
+# small -> large so failures surface early
+ARCH_ORDER = [
+    "qwen3-1.7b", "qwen2.5-3b", "phi-3-vision-4.2b", "whisper-medium",
+    "falcon-mamba-7b", "nemotron-4-15b", "jamba-v0.1-52b", "dbrx-132b",
+    "mistral-large-123b", "deepseek-v3-671b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+SUBQUADRATIC = {"falcon-mamba-7b", "jamba-v0.1-52b"}
+
+
+def cells():
+    for arch in ARCH_ORDER:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in SUBQUADRATIC:
+                continue
+            yield arch, shape
+
+
+def run_one(cmd: list[str], out_path: str, timeout: int = 2400) -> str:
+    if os.path.exists(out_path):
+        return "cached"
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env, cwd=ROOT)
+        if proc.returncode != 0:
+            err = (proc.stderr or "")[-1500:]
+            with open(out_path, "w") as f:
+                json.dump({"ok": False, "error": err}, f)
+            return f"FAIL ({time.time()-t0:.0f}s)"
+        return f"ok ({time.time()-t0:.0f}s)"
+    except subprocess.TimeoutExpired:
+        with open(out_path, "w") as f:
+            json.dump({"ok": False, "error": "timeout"}, f)
+        return "TIMEOUT"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--phase", type=int, default=0, help="0=all")
+    ap.add_argument("--only")
+    args = ap.parse_args()
+    py = sys.executable
+
+    def phase1():
+        for arch, shape in cells():
+            if args.only and arch != args.only:
+                continue
+            out = f"{RESULTS}/dryrun/{arch}_{shape}.json"
+            st = run_one([py, "-m", "repro.launch.dryrun", "--arch", arch,
+                          "--shape", shape, "--mode", "cassandra",
+                          "--out", out], out)
+            print(f"[p1] {arch} {shape}: {st}", flush=True)
+
+    def phase2():
+        for arch, shape in cells():
+            if args.only and arch != args.only:
+                continue
+            out = f"{RESULTS}/dryrun_mp/{arch}_{shape}.json"
+            st = run_one([py, "-m", "repro.launch.dryrun", "--arch", arch,
+                          "--shape", shape, "--mode", "cassandra",
+                          "--multi-pod", "--out", out], out)
+            print(f"[p2] {arch} {shape} mp: {st}", flush=True)
+
+    def phase3():
+        for arch, shape in cells():
+            if args.only and arch != args.only:
+                continue
+            out = f"{RESULTS}/roofline/{arch}_{shape}.json"
+            st = run_one([py, "-m", "repro.launch.roofline", "--arch", arch,
+                          "--shape", shape, "--mode", "cassandra",
+                          "--out", out], out)
+            print(f"[p3] {arch} {shape} roofline: {st}", flush=True)
+
+    def phase4():
+        for arch, shape in cells():
+            if args.only and arch != args.only:
+                continue
+            if "decode" not in shape and shape != "long_500k":
+                continue
+            out = f"{RESULTS}/roofline_bf16/{arch}_{shape}.json"
+            st = run_one([py, "-m", "repro.launch.roofline", "--arch", arch,
+                          "--shape", shape, "--mode", "bf16", "--out", out],
+                         out)
+            print(f"[p4] {arch} {shape} bf16: {st}", flush=True)
+
+    phases = {1: phase1, 2: phase2, 3: phase3, 4: phase4}
+    todo = [args.phase] if args.phase else [1, 2, 3, 4]
+    for p in todo:
+        phases[p]()
+    print("sweep complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Design-space exploration (paper Eq. 2): acceptance vs compression grid.
+
+Runs the paper's practical DSE — sweep the dominant byte term first —
+on a trained smoke model and prints the ranked configurations.
+
+  PYTHONPATH=src python examples/acceptance_sweep.py [--fast]
+"""
+import argparse
+import sys
+import os
+
+from repro.core.dse import grid_search
+from repro.core.format import CassandraConfig
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import common  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="coarser grid (CI-friendly)")
+    args = ap.parse_args()
+
+    cfg, params = common.trained_smoke_model()
+
+    def acceptance_fn(w_p, w_t, kv_p, kv_t):
+        cass = CassandraConfig(variant=1, weight_prune=w_p, weight_trunc=w_t,
+                               kv_prune=kv_p, kv_trunc=kv_t)
+        stats = common.measure_acceptance(cfg, params, cass, gamma=3,
+                                          max_new=12, n_prompts=2,
+                                          calibrate=False)
+        print(f"  probe w_p={w_p} w_t={w_t} kv_p={kv_p} kv_t={kv_t} "
+              f"-> α={stats['acceptance']:.3f}")
+        return stats["acceptance"]
+
+    # weight bytes dominate at short context (paper: optimize dominant first)
+    prune_grid = (0.3, 0.5) if args.fast else (0.3, 0.4, 0.5, 0.6)
+    trunc_grid = (2, 4) if args.fast else (0, 2, 4, 5)
+    points = grid_search(acceptance_fn, s_w=10.0, s_kv=1.0,
+                         prune_grid=prune_grid, trunc_grid=trunc_grid)
+    print("\ntop configurations by J = α / draft-bytes:")
+    for p in points[:5]:
+        print(f"  J={p.objective:9.4f}  α={p.alpha:.3f} "
+              f"w=({p.weight_prune},{p.weight_trunc}) "
+              f"kv=({p.kv_prune},{p.kv_trunc}) draft={p.draft_ratio:.2f}")
+
+
+if __name__ == "__main__":
+    main()

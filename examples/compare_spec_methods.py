@@ -1,0 +1,23 @@
+"""Paper Fig. 13 runner: Cassandra vs layer-skip (Draft&Verify-style) vs
+KV-only (MagicDec-style) speculative decoding, all through the same engine.
+
+  PYTHONPATH=src python examples/compare_spec_methods.py
+"""
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import compare_methods  # noqa: E402
+
+
+def main():
+    rows = compare_methods.run()
+    print("\nmethod              acceptance  draft-byte-ratio  speedup")
+    for name, alpha, c, sp in rows:
+        print(f"{name:20s} {alpha:9.3f} {c:15.2f} {sp:9.2f}x")
+    print("\npaper Fig. 13: Cassandra > Draft&Verify / MagicDec across all "
+          "four benchmarks at batch 1")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end serving driver: batched requests through the Cassandra
+engine on a briefly-trained model (the paper's "reasoning at edge"
+scenario at smoke scale: long outputs, low batch, lossless speedup).
+
+  PYTHONPATH=src python examples/serve_reasoning.py [--arch llama3-8b]
+"""
+import argparse
+import time
+
+from repro.core.format import CassandraConfig
+from repro.core.speculative import speedup_model
+
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import common  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--gamma", type=int, default=5)
+    args = ap.parse_args()
+
+    print(f"[1/3] training smoke {args.arch} on the synthetic corpus …")
+    cfg, params = common.trained_smoke_model(args.arch)
+
+    print("[2/3] calibrating (Wanda) + formatting (40% prune, 4-bit trunc)")
+    cass = CassandraConfig(variant=1, gamma=args.gamma)
+
+    print(f"[3/3] serving {args.requests} concurrent requests, "
+          f"γ={args.gamma} …")
+    t0 = time.time()
+    stats = common.measure_acceptance(cfg, params, cass, gamma=args.gamma,
+                                      max_new=args.max_new,
+                                      n_prompts=args.requests)
+    dt = time.time() - t0
+    alpha = stats["acceptance"]
+    print(f"\ncycles={stats['cycles']}  acceptance={alpha:.3f}  "
+          f"tokens/cycle={stats['tokens_per_cycle']:.2f}  wall={dt:.1f}s")
+    print(f"bandwidth-model speedup at this acceptance "
+          f"(c=0.33): {speedup_model(alpha, args.gamma, 0.33):.2f}x vs bf16")
+    print("paper reference: acceptance 0.74–0.91 on trained 4–8B models "
+          "→ 1.78–2.41x")
+
+
+if __name__ == "__main__":
+    main()

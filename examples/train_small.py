@@ -1,0 +1,23 @@
+"""Train a small model end-to-end with the fault-tolerant driver
+(checkpoint/auto-resume, straggler watchdog, failure injection).
+
+  PYTHONPATH=src python examples/train_small.py [--arch qwen3-1.7b]
+"""
+import argparse
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    run(["--arch", args.arch, "--smoke", "--steps", str(args.steps),
+         "--batch", "8", "--seq", "64", "--ckpt-every", "20",
+         "--fail-at-step", "30",      # exercise restore-on-failure
+         "--ckpt-dir", "/tmp/repro_example_ckpt"])
+
+
+if __name__ == "__main__":
+    main()

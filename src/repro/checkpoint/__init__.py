@@ -1,0 +1,7 @@
+"""Sharded checkpoints: atomic manifest, elastic resharding, auto-resume."""
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager,
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+)

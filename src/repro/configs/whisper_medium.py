@@ -1,0 +1,24 @@
+"""whisper-medium [audio] — enc-dec, conv frontend STUB. [arXiv:2212.04356]
+
+24 encoder + 24 decoder layers; the mel/conv frontend is a stub — precomputed
+frame embeddings (B, 1500, d_model) arrive via ``input_specs``. The decoder
+self-attention KV cache is Cassandra-packed; cross-attention K/V are computed
+once per request (prefill) and also packed.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+    vocab_size=51_865, head_dim=64, ffn_act="gelu",
+    norm_eps=1e-5, n_encoder_layers=24, cross_attention=True,
+    frontend="audio", frontend_tokens=1500, max_wavelength_pos=32_768,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-medium-smoke", family="audio",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab_size=512, head_dim=32, ffn_act="gelu",
+    n_encoder_layers=2, cross_attention=True,
+    frontend="audio", frontend_tokens=32, max_wavelength_pos=1024,
+)

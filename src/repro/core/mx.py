@@ -1,0 +1,128 @@
+"""MX (microscaling) shared-exponent format for Cassandra-2.
+
+Groups of ``G`` values share one 8-bit exponent (the group max). Each value
+becomes a fixed-point mantissa inside a 16-bit container::
+
+    m16 = (1.mmmmmmm << 8) >> (E_shared - e)     # explicit leading 1
+
+which is bit-exact whenever the exponent gap is <= 8 (a 2^8 dynamic range
+inside a 32-value group — the residual loss beyond that is the paper's
+"slight accuracy degradation" of Cassandra-2).
+
+The draft model consumes only the top ``draft_bits`` of ``m16`` plus the
+sign — a strict bit-subset, so Cassandra-2 needs no extra capacity either.
+The verification payload is the remaining low bits of ``m16``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+
+CONTAINER_BITS = 16
+
+
+@partial(jax.jit, static_argnames=("group",))
+def mx_encode(x: jax.Array, group: int = 32) -> dict[str, jax.Array]:
+    """Encode bf16 (..., K) (K divisible by ``group``) into MX form.
+
+    Returns ``{"sign": (...,K) uint8, "m16": (...,K) uint16,
+    "shared_exp": (..., K//group) uint8}``.
+    """
+    k = x.shape[-1]
+    if k % group != 0:
+        raise ValueError(f"K={k} not divisible by group={group}")
+    sign, exp, mant = bitops.split_fields(x)
+    g = x.shape[:-1] + (k // group, group)
+    exp_g = exp.reshape(g)
+    shared = jnp.max(exp_g, axis=-1)                       # (..., K//group)
+    gap = (shared[..., None].astype(jnp.int32) - exp_g.astype(jnp.int32))
+    # explicit leading 1 (zero iff exp==0: bf16 subnormals/zero have no hidden 1)
+    m9 = jnp.where(exp_g.reshape(g) == 0, 0,
+                   (mant.reshape(g).astype(jnp.int32) | 0x80))
+    m16 = (m9 << 8) >> jnp.clip(gap, 0, 31)
+    return {
+        "sign": sign,
+        "m16": m16.reshape(x.shape).astype(jnp.uint16),
+        "shared_exp": shared.astype(jnp.uint8),
+    }
+
+
+@partial(jax.jit, static_argnames=("group", "keep_bits"))
+def mx_decode(enc: dict[str, jax.Array], group: int = 32,
+              keep_bits: int = CONTAINER_BITS) -> jax.Array:
+    """Decode MX form back to bf16 (draft view when keep_bits < 16).
+
+    ``keep_bits`` keeps only the top bits of the container (mantissa
+    truncation inside MX — the Cassandra-2 draft uses e.g. 4).
+    """
+    m16 = enc["m16"].astype(jnp.int32)
+    if keep_bits < CONTAINER_BITS:
+        drop = CONTAINER_BITS - keep_bits
+        m16 = (m16 >> drop) << drop
+    k = m16.shape[-1]
+    g = m16.shape[:-1] + (k // group, group)
+    m16g = m16.reshape(g)
+    shared = enc["shared_exp"][..., None].astype(jnp.int32)
+    # renormalise: find the leading-one position of m16 (15 = container top)
+    # value = m16 * 2^(shared - 127 - 15 + 7)  as a float; rebuild bf16 fields
+    lead = 15 - _clz16(m16g)                                # -1 if m16 == 0
+    e = shared - (15 - lead)
+    is_zero = (m16g == 0) | (e <= 0)
+    # mantissa: take the 7 bits below the leading one
+    shift = jnp.clip(lead - 7, -7, 8)
+    mant = jnp.where(shift >= 0, m16g >> shift, m16g << (-shift)) & 0x7F
+    exp_f = jnp.where(is_zero, 0, jnp.clip(e, 0, 255)).astype(jnp.uint8)
+    mant_f = jnp.where(is_zero, 0, mant).astype(jnp.uint8)
+    sign = enc["sign"].reshape(g)
+    return bitops.join_fields(sign, exp_f, mant_f).reshape(enc["m16"].shape)
+
+
+def _clz16(x: jax.Array) -> jax.Array:
+    """Count leading zeros of a 16-bit value (result 16 for x == 0)."""
+    x = x.astype(jnp.uint32)
+    # binary-search clz
+    n = jnp.where(x == 0, 16, 0).astype(jnp.int32)
+    y = x
+    cond = y <= 0x00FF
+    n = n + jnp.where((x != 0) & cond, 8, 0)
+    y = jnp.where(cond, y << 8, y)
+    cond = y <= 0x0FFF
+    n = n + jnp.where((x != 0) & cond, 4, 0)
+    y = jnp.where(cond, y << 4, y)
+    cond = y <= 0x3FFF
+    n = n + jnp.where((x != 0) & cond, 2, 0)
+    y = jnp.where(cond, y << 2, y)
+    cond = y <= 0x7FFF
+    n = n + jnp.where((x != 0) & cond, 1, 0)
+    return n
+
+
+def pack_draft(enc: dict[str, jax.Array], draft_bits: int = 4
+               ) -> dict[str, jax.Array]:
+    """Extract the draft payload: sign + top ``draft_bits`` of m16 (packed)."""
+    top = (enc["m16"].astype(jnp.uint32) >> (CONTAINER_BITS - draft_bits))
+    code = ((enc["sign"].astype(jnp.uint32) << draft_bits) | top)
+    if draft_bits == 3:
+        return {"code": bitops.pack_nibbles(code.astype(jnp.uint8)),
+                "shared_exp": enc["shared_exp"]}
+    # draft_bits == 4 -> 5-bit code; store as bytes for simplicity at ref level
+    return {"code": code.astype(jnp.uint8), "shared_exp": enc["shared_exp"]}
+
+
+def unpack_draft(packed: dict[str, jax.Array], draft_bits: int = 4,
+                 k: int | None = None) -> dict[str, jax.Array]:
+    """Inverse of :func:`pack_draft`; returns an MX dict (draft view)."""
+    code = packed["code"]
+    if draft_bits == 3:
+        code = bitops.unpack_nibbles(code)
+        if k is not None:
+            code = code[..., :k]
+    code = code.astype(jnp.uint32)
+    sign = (code >> draft_bits) & 1
+    m16 = (code & ((1 << draft_bits) - 1)) << (CONTAINER_BITS - draft_bits)
+    return {"sign": sign.astype(jnp.uint8), "m16": m16.astype(jnp.uint16),
+            "shared_exp": packed["shared_exp"]}

@@ -1,0 +1,147 @@
+"""Offline model-to-Cassandra-format transformation (paper Fig. 4a).
+
+``format_params`` walks a parameter pytree and replaces every large matmul
+weight with its packed ``{"spec", "verif"}`` partition. Small / accuracy-
+critical leaves stay full precision: embeddings (row lookups — no bandwidth
+win), MoE routers (paper keeps them exact), norms, biases, convs, SSM
+A_log/D/dt. Stacked (scan) weights of shape (R, in, out) are packed per
+layer via vmap.
+
+Wanda calibration: ``Calibrator`` records per-input-channel activation L2
+norms during an (unjitted) calibration forward; ``format_params`` consumes
+its stats keyed by the layer path. Without calibration the score falls back
+to |W| (magnitude pruning) — acceptance is a little lower but nothing
+breaks (measured in benchmarks/acceptance.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import format as fmt
+from repro.core.format import CassandraConfig
+
+# parent-dict keys whose "w" leaves must stay full precision
+_SKIP_PARENTS = {"router"}
+# leaf names that are never packed
+_SKIP_LEAVES = {"conv_w", "conv_b", "A_log", "D", "dt_bias", "table",
+                "scale", "bias", "b"}
+
+
+class Calibrator:
+    """Collects per-path activation L2 norms (Wanda's ||act||_2).
+
+    Used as ``Runtime(collector=Calibrator())`` on an **unjitted** forward
+    over ~128 calibration samples; traced observations (e.g. inside vmap)
+    are skipped silently.
+    """
+
+    def __init__(self):
+        self.sq_sums: dict[str, Any] = {}
+        self.counts: dict[str, int] = {}
+
+    def observe(self, path: str, x) -> None:
+        if isinstance(x, jax.core.Tracer):
+            return
+        flat = jnp.reshape(x, (-1, x.shape[-1])).astype(jnp.float32)
+        sq = jnp.sum(jnp.square(flat), axis=0)
+        if path in self.sq_sums and self.sq_sums[path].shape == sq.shape:
+            self.sq_sums[path] = self.sq_sums[path] + sq
+        else:
+            self.sq_sums[path] = sq
+        self.counts[path] = self.counts.get(path, 0) + flat.shape[0]
+
+    def act_norm(self, path: str):
+        if path not in self.sq_sums:
+            return None
+        return jnp.sqrt(self.sq_sums[path])
+
+
+def _should_pack(parent_key: str, w: jax.Array) -> bool:
+    if parent_key in _SKIP_PARENTS:
+        return False
+    if w.ndim not in (2, 3):
+        return False
+    n_in, n_out = w.shape[-2], w.shape[-1]
+    if n_in < 64 or n_out < 8:
+        return False
+    return n_in % 32 == 0
+
+
+def _pack_weight(w: jax.Array, act_norm, cass: CassandraConfig, trim: bool):
+    def one(wl, an):
+        wt = wl.T
+        if an is None:
+            scores = jnp.abs(wt.astype(jnp.float32))
+        else:
+            from repro.core import pruning
+            scores = pruning.wanda_scores(wl, an).T
+        block = cass.weight_block(wl.shape[0])
+        keep = cass.weight_keep(block)
+        return fmt.format_tensor(wt, scores, cass, block, keep,
+                                 cass.mx_group, cass.weight_trunc)
+
+    if w.ndim == 2:
+        spec, verif = one(w, act_norm)
+    elif act_norm is None:
+        spec, verif = jax.vmap(lambda wl: one(wl, None))(w)
+    else:
+        spec, verif = jax.vmap(one)(w, act_norm)
+    if trim:  # host sync — concrete values only (offline formatting)
+        spec, verif = fmt._trim_lossless(spec, verif, cass.variant)
+    return {"spec": spec, "verif": verif}
+
+
+def format_params(params: Any, cass: CassandraConfig,
+                  calib: Calibrator | None = None,
+                  trim: bool = True) -> Any:
+    """Replace packable weights with Cassandra partitions (see module doc).
+
+    ``trim=False`` keeps the (redundant) correction nibbles so the function
+    is trace-safe — used by ``jax.eval_shape`` in the dry-run.
+    """
+
+    def walk(node, parent_key: str, path: str):
+        if isinstance(node, dict):
+            if "w" in node and not isinstance(node["w"], dict):
+                w = node["w"]
+                if _should_pack(parent_key, w):
+                    an = calib.act_norm(path) if calib is not None else None
+                    if an is not None and an.shape[-1] != w.shape[-2]:
+                        an = None
+                    out = dict(node)
+                    out["w"] = _pack_weight(w, an, cass, trim)
+                    return out
+                return node
+            return {k: walk(v, k, f"{path}.{k}" if path else k)
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, parent_key, f"{path}[{i}]")
+                    for i, v in enumerate(node)]
+        return node
+
+    return walk(params, "", "")
+
+
+def params_nbytes(params: Any) -> dict[str, int]:
+    """Byte accounting: plain vs spec vs verif (Fig. 14 inputs)."""
+    acc = {"plain": 0, "spec": 0, "verif": 0}
+
+    def walk(node, zone):
+        if isinstance(node, dict):
+            if "spec" in node and "verif" in node:
+                walk(node["spec"], "spec")
+                walk(node["verif"], "verif")
+                return
+            for v in node.values():
+                walk(v, zone)
+        elif isinstance(node, list):
+            for v in node:
+                walk(v, zone)
+        elif hasattr(node, "dtype"):
+            acc[zone] += node.size * jnp.dtype(node.dtype).itemsize
+
+    walk(params, "plain")
+    return acc

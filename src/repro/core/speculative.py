@@ -1,0 +1,116 @@
+"""Model-agnostic speculative-decoding acceptance machinery.
+
+Implements both acceptance rules the paper discusses (§II-B):
+
+* **greedy** — a drafted token is accepted iff it equals the target model's
+  argmax at that position; the target output is preserved *exactly* (this is
+  the rule behind the lossless Table III results).
+* **rejection sampling** (Eq. 1) — accept token i iff
+  ``r_i <= p_i(x)/q_i(x)``; on the first rejection, resample from
+  ``normalize(max(p - q, 0))``. The generated sequence is then provably
+  distributed exactly as target-model sampling.
+
+Everything is batched and jit-safe; the serving engine drives these per
+speculative cycle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AcceptResult(NamedTuple):
+    n_accepted: jax.Array   # (B,) int32 — number of drafted tokens accepted
+    next_token: jax.Array   # (B,) int32 — bonus/resampled token appended after
+    tokens: jax.Array       # (B, gamma+1) int32 — accepted prefix + next, padded
+    valid: jax.Array        # (B, gamma+1) bool — which slots hold real tokens
+
+
+def _assemble(draft_tokens: jax.Array, n: jax.Array,
+              next_token: jax.Array) -> tuple[jax.Array, jax.Array]:
+    b, gamma = draft_tokens.shape
+    iota = jnp.arange(gamma + 1)[None, :]
+    keep_draft = iota < n[:, None]
+    padded = jnp.concatenate(
+        [draft_tokens, jnp.zeros((b, 1), draft_tokens.dtype)], axis=1)
+    tokens = jnp.where(keep_draft, padded, 0)
+    tokens = jnp.where(iota == n[:, None], next_token[:, None], tokens)
+    valid = iota <= n[:, None]
+    return tokens, valid
+
+
+def greedy_accept(draft_tokens: jax.Array,
+                  target_logits: jax.Array) -> AcceptResult:
+    """Greedy rule. draft_tokens (B, gamma); target_logits (B, gamma+1, V).
+
+    target_logits[:, i] is the target distribution *after* seeing the first
+    i drafted tokens; position gamma provides the bonus token when every
+    draft matches.
+    """
+    target_argmax = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)
+    gamma = draft_tokens.shape[1]
+    match = draft_tokens == target_argmax[:, :gamma]
+    n = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    next_token = jnp.take_along_axis(
+        target_argmax, n[:, None], axis=1)[:, 0]
+    tokens, valid = _assemble(draft_tokens, n, next_token)
+    return AcceptResult(n, next_token, tokens, valid)
+
+
+def rejection_sample(draft_tokens: jax.Array, draft_probs: jax.Array,
+                     target_probs: jax.Array, key: jax.Array,
+                     r: jax.Array | None = None) -> AcceptResult:
+    """Paper Eq. 1. draft_probs (B, gamma, V); target_probs (B, gamma+1, V).
+
+    ``r`` (B, gamma) overrides the uniform draws (for deterministic tests).
+    Guarantees output tokens ~ target distribution.
+    """
+    b, gamma = draft_tokens.shape
+    key_r, key_s = jax.random.split(key)
+    if r is None:
+        r = jax.random.uniform(key_r, (b, gamma))
+    px = jnp.take_along_axis(target_probs[:, :gamma],
+                             draft_tokens[..., None], axis=-1)[..., 0]
+    qx = jnp.take_along_axis(draft_probs, draft_tokens[..., None],
+                             axis=-1)[..., 0]
+    reject = r > px / jnp.maximum(qx, 1e-20)
+    # n = index of first rejection, or gamma if none (Eq. 1)
+    any_rej = jnp.any(reject, axis=1)
+    first_rej = jnp.argmax(reject, axis=1)
+    n = jnp.where(any_rej, first_rej, gamma).astype(jnp.int32)
+    # residual distribution at the stopping position
+    pn = jnp.take_along_axis(
+        target_probs, n[:, None, None].repeat(target_probs.shape[-1], -1),
+        axis=1)[:, 0]
+    qn = jnp.take_along_axis(
+        jnp.concatenate([draft_probs,
+                         jnp.zeros_like(draft_probs[:, :1])], axis=1),
+        n[:, None, None].repeat(draft_probs.shape[-1], -1), axis=1)[:, 0]
+    residual = jnp.where(any_rej[:, None], jnp.maximum(pn - qn, 0.0), pn)
+    residual = residual / jnp.maximum(
+        jnp.sum(residual, axis=-1, keepdims=True), 1e-20)
+    next_token = jax.random.categorical(
+        key_s, jnp.log(jnp.maximum(residual, 1e-20))).astype(jnp.int32)
+    tokens, valid = _assemble(draft_tokens, n, next_token)
+    return AcceptResult(n, next_token, tokens, valid)
+
+
+def expected_tokens_per_cycle(alpha: float, gamma: int) -> float:
+    """E[tokens generated per speculative cycle] for i.i.d. acceptance alpha."""
+    if alpha >= 1.0:
+        return float(gamma + 1)
+    return (1.0 - alpha ** (gamma + 1)) / (1.0 - alpha)
+
+
+def speedup_model(alpha: float, gamma: int, draft_cost_ratio: float,
+                  verify_cost_ratio: float = 1.0) -> float:
+    """Analytical speedup over autoregressive decoding (paper §II-B).
+
+    ``draft_cost_ratio`` = t_draft / t_target (the compression ratio c for a
+    memory-bound decode); ``verify_cost_ratio`` = cost of the batched verify
+    relative to one target step (≈1 while memory-bound).
+    """
+    e = expected_tokens_per_cycle(alpha, gamma)
+    return e / (gamma * draft_cost_ratio + verify_cost_ratio)

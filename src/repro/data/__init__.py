@@ -1,0 +1,7 @@
+"""Data pipeline: deterministic synthetic + file-backed token streams."""
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    synthetic_batches,
+    host_shard_iterator,
+    Prefetcher,
+)

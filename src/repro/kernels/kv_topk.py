@@ -1,0 +1,62 @@
+"""Online KV encoder Pallas kernel — the paper's encoder (Fig. 8b).
+
+Per (token, head) vector: magnitude top-k selection (rank by pairwise
+compare — O(d²) VPU compares beat a sort on 128-lane vectors), bitmap
+emission via static reshape-dot packing, and position-ordered compaction
+of the kept values through a one-hot MXU matmul (k×d is small here, so the
+matmul trick is cheap — contrast with draft_matmul's gather).
+
+The bit-level packing of sign/mantissa/exponent streams happens in
+``ops.encode_kv_packed`` on the output of this kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(v_ref, bitmap_ref, kept_ref, *, d, keep):
+    v = v_ref[...]                                         # (R, d) bf16
+    av = jnp.abs(v.astype(jnp.float32))
+    # rank by (|v_j| > |v_i|) + tie-break on earlier index
+    gt = (av[:, None, :] > av[:, :, None]).astype(jnp.int32)   # [r,i,j]
+    eq = (av[:, None, :] == av[:, :, None])
+    earlier = (jnp.arange(d)[None, :, None] > jnp.arange(d)[None, None, :])
+    rank = jnp.sum(gt + (eq & earlier).astype(jnp.int32), axis=-1)  # (R, d)
+    mask = (rank < keep).astype(jnp.int32)                 # exactly keep ones
+    # bitmap: static pack via reshape-dot
+    mb = mask.reshape(mask.shape[0], d // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    bitmap_ref[...] = jnp.sum(mb.astype(jnp.uint32) * weights, axis=-1)
+    # position-ordered compaction: one-hot (keep, d) @ v
+    pos_rank = jnp.cumsum(mask, axis=-1) - 1               # (R, d)
+    onehot = ((pos_rank[:, None, :] == jnp.arange(keep)[None, :, None])
+              & (mask[:, None, :] == 1)).astype(jnp.float32)
+    kept_ref[...] = jnp.einsum(
+        "rkd,rd->rk", onehot, v.astype(jnp.float32)).astype(v.dtype)
+
+
+@partial(jax.jit, static_argnames=("keep", "tile", "interpret"))
+def kv_topk(v: jax.Array, keep: int, tile: int = 32,
+            interpret: bool = False) -> dict:
+    """(R, d) vectors -> {"bitmap": (R, d//32) u32, "kept": (R, keep)}."""
+    r, d = v.shape
+    tile = min(tile, r)
+    bitmap, kept = pl.pallas_call(
+        partial(_kernel, d=d, keep=keep),
+        grid=(r // tile,),
+        in_specs=[pl.BlockSpec((tile, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tile, d // 32), lambda i: (i, 0)),
+            pl.BlockSpec((tile, keep), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, d // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((r, keep), v.dtype),
+        ],
+        interpret=interpret,
+    )(v)
+    return {"bitmap": bitmap, "kept": kept}

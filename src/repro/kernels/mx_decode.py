@@ -1,0 +1,63 @@
+"""MX-format decoder Pallas kernel (Cassandra-2 path).
+
+The paper's decoder-#N dataflow: mantissa concatenate → parallel zero
+count (leading-zero detect) → dynamic shift + exponent subtract. On the
+VPU the leading-zero count is a 4-step binary search over int16 lanes and
+the dynamic shifter is a vector shift — one pass, no cross-lane traffic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _clz16(x: jax.Array) -> jax.Array:
+    """Leading zeros of 16-bit lanes (binary search, branch-free)."""
+    n = jnp.where(x == 0, 16, 0).astype(jnp.int32)
+    y = x
+    for sh, mask in ((8, 0x00FF), (4, 0x0FFF), (2, 0x3FFF), (1, 0x7FFF)):
+        cond = y <= mask
+        n = n + jnp.where((x != 0) & cond, sh, 0)
+        y = jnp.where(cond, y << sh, y)
+    return n
+
+
+def _kernel(sign_ref, m16_ref, se_ref, out_ref, *, group):
+    m16 = m16_ref[...].astype(jnp.int32)                  # (R, K)
+    r, k = m16.shape
+    shared = se_ref[...].astype(jnp.int32)                # (R, K//group)
+    shared = jnp.repeat(shared, group, axis=-1)           # (R, K)
+    lead = 15 - _clz16(m16)                               # -1 if zero
+    e = shared - (15 - lead)
+    is_zero = (m16 == 0) | (e <= 0)
+    shift = jnp.clip(lead - 7, -7, 8)
+    mant = jnp.where(shift >= 0, m16 >> shift, m16 << (-shift)) & 0x7F
+    exp_f = jnp.where(is_zero, 0, jnp.clip(e, 0, 255))
+    mant_f = jnp.where(is_zero, 0, mant)
+    bits = ((sign_ref[...].astype(jnp.int32) << 15)
+            | (exp_f << 7) | mant_f).astype(jnp.uint16)
+    out_ref[...] = jax.lax.bitcast_convert_type(bits, jnp.bfloat16)
+
+
+@partial(jax.jit, static_argnames=("group", "tile", "interpret"))
+def mx_decode(sign: jax.Array, m16: jax.Array, shared_exp: jax.Array,
+              group: int = 32, tile: int = 64,
+              interpret: bool = False) -> jax.Array:
+    """(R, K) MX lanes -> (R, K) bf16. shared_exp is (R, K//group)."""
+    r, k = m16.shape
+    tile = min(tile, r)
+    return pl.pallas_call(
+        partial(_kernel, group=group),
+        grid=(r // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile, k // group), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, k), jnp.bfloat16),
+        interpret=interpret,
+    )(sign, m16, shared_exp)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets).
+
+These delegate to the validated ``repro.core`` numerics so the kernels are
+checked against the same code the 512-device dry-run lowers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, coding, mx, pruning
+from repro.core.format import CassandraConfig, draft_tensor
+
+
+def draft_matmul_ref(x: jax.Array, spec: dict, cass: CassandraConfig,
+                     shape: tuple[int, int]) -> jax.Array:
+    """x (..., K) @ draft_weight (K, N) -> (..., N), fp32 accumulation."""
+    n_in, n_out = shape
+    block = cass.weight_block(n_in)
+    keep = cass.weight_keep(block)
+    wt = draft_tensor(spec, cass, block, keep, cass.mx_group,
+                      cass.weight_trunc, n_in)          # (N, K)
+    w = wt.reshape(n_out, n_in).T
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def draft_weight_ref(spec: dict, cass: CassandraConfig,
+                     shape: tuple[int, int]) -> jax.Array:
+    n_in, n_out = shape
+    block = cass.weight_block(n_in)
+    keep = cass.weight_keep(block)
+    wt = draft_tensor(spec, cass, block, keep, cass.mx_group,
+                      cass.weight_trunc, n_in)
+    return wt.reshape(n_out, n_in).T
+
+
+def unary_decode_ref(words: jax.Array, k: int, exp_bits: int = 3
+                     ) -> jax.Array:
+    """Packed unary region (..., W) u32 -> ranks (..., K) u8."""
+    n_bits = coding.region_words(k, exp_bits) * 32
+    bits = bitops.unpack_bits(words, n_bits)
+    return coding.unary_decode_block(bits, k)
+
+
+def mx_decode_ref(sign: jax.Array, m16: jax.Array, shared_exp: jax.Array,
+                  group: int = 32) -> jax.Array:
+    return mx.mx_decode({"sign": sign, "m16": m16, "shared_exp": shared_exp},
+                        group=group)
+
+
+def kv_topk_ref(v: jax.Array, keep: int) -> dict:
+    """Per-vector magnitude top-k: bitmap + position-ordered kept values."""
+    d = v.shape[-1]
+    sel = pruning.select_topk_blocked(v, jnp.abs(v.astype(jnp.float32)),
+                                      keep, d)
+    return {"bitmap": sel["bitmap"][..., 0, :],
+            "kept": sel["kept"][..., 0, :]}

@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices. Do NOT
+replicate this env var anywhere global: smoke tests and benches see 1
+device.
+
+Per cell this driver:
+  1. builds the step function the cluster would run (train_step /
+     forward_prefill / spec_decode_step / autoregressive baseline),
+  2. ``jit(fn, in_shardings=…).lower(*ShapeDtypeStructs)`` — no allocation,
+  3. ``.compile()`` — proves the sharding config is coherent end-to-end,
+  4. records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+     (FLOPs / bytes for §Roofline) and per-collective byte counts parsed
+     from the partitioned HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k \
+      [--multi-pod] [--mode cassandra|bf16] [--out out.json]
+  python -m repro.launch.dryrun --list            # enumerate all cells
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, input_specs, shape_applicable, SHAPES
+from repro.configs.base import ModelConfig
+from repro.core.format import CassandraConfig
+from repro.core.packing import format_params
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.layers import Runtime
+from repro.serving import kvcache as KC
+from repro.serving.engine import (EngineConfig, spec_decode_step,
+                                  autoregressive_step)
+from repro.sharding import rules as R
+from repro.training import OptConfig, init_opt_state, train_step
+from repro.training.trainer import TrainConfig
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+_COLL_RE = re.compile(
+    r"=\s+((?:\(\S+\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective in the partitioned module.
+
+    The partitioned HLO prints operands without inline shapes, so operand
+    bytes are derived from the *output* shape and the op's semantics with
+    group size N (from replica_groups=[G,N]): all-gather operand =
+    out/N, reduce-scatter operand = out*N, others operand = out.
+    """
+    per_kind: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_shape, kind = m.group(1), m.group(2)
+        out_b = _shape_bytes(out_shape)
+        gm = _GROUPS_RE.search(line)
+        n = int(gm.group(2)) if gm else 1
+        if kind == "all-gather":
+            op_b = out_b / max(n, 1)
+        elif kind == "reduce-scatter":
+            op_b = out_b * n
+        else:
+            op_b = out_b
+        per_kind[kind] = per_kind.get(kind, 0) + op_b
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "count_by_kind": count,
+            "total_bytes": sum(per_kind.values())}
+
+
+def _key_struct():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _params_struct(cfg: ModelConfig, cass: CassandraConfig | None):
+    ps = jax.eval_shape(partial(M.init_params, cfg), _key_struct())
+    if cass is not None:
+        ps = jax.eval_shape(
+            lambda p: format_params(p, cass, trim=False), ps)
+    return ps
+
+
+def _param_count(cfg: ModelConfig) -> int:
+    ps = jax.eval_shape(partial(M.init_params, cfg), _key_struct())
+    return sum(x.size for x in jax.tree.leaves(ps)
+               if x.dtype == jnp.bfloat16)
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """6·N_active per token (dense) — MoE counts routed-active params."""
+    n_total = _param_count(cfg)
+    if cfg.n_experts:
+        # subtract inactive expert params
+        e_params = 0
+        for g in [e for e in cfg.block_pattern]:
+            pass
+        n_moe_layers = sum(
+            1 for i in range(cfg.n_layers)
+            if cfg.pattern_for_layer(i)[1] == "M")
+        per_expert = 3 * cfg.d_model * cfg.expert_ff  # gate+up+down
+        inactive = n_moe_layers * per_expert * (
+            cfg.n_experts - cfg.n_experts_per_tok)
+        n_active = n_total - inactive
+    else:
+        n_active = n_total
+    return 6.0 * n_active
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+
+def build_train(cfg: ModelConfig, mesh, shape_name: str):
+    rt = Runtime(cfg=cfg, shard=R.act_shard_fn(mesh), remat=True,
+                 attn_chunk_q=512, attn_chunk_k=1024)
+    big = _param_count(cfg) > 3e10
+    tcfg = TrainConfig(opt=OptConfig(
+        state_dtype="int8" if big else "fp32"))
+    ps = _params_struct(cfg, None)
+    os_ = jax.eval_shape(partial(init_opt_state, cfg=tcfg.opt), ps)
+    batch = input_specs(cfg, shape_name)
+    fn = lambda p, o, b: train_step(rt, p, o, b, tcfg)  # noqa: E731
+    in_sh = (R.param_shardings(mesh, ps), R.opt_shardings(mesh, os_),
+             R.batch_shardings(mesh, batch))
+    return fn, (ps, os_, batch), in_sh
+
+
+def build_prefill(cfg: ModelConfig, mesh, shape_name: str,
+                  cassandra: bool = True):
+    cass = CassandraConfig(variant=1) if cassandra else None
+    rt = Runtime(cfg=cfg, cass=cass, view="target" if cassandra else "plain",
+                 shard=R.act_shard_fn(mesh), attn_chunk_q=512,
+                 attn_chunk_k=1024)
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    ps = _params_struct(cfg, cass)
+    cache = KC.cache_specs(cfg, cass, b, s + 64, packed=cassandra)
+    batch = input_specs(cfg, shape_name)
+    fn = lambda p, bt, c: M.forward_prefill(rt, p, bt, c)  # noqa: E731
+    in_sh = (R.param_shardings(mesh, ps), R.batch_shardings(mesh, batch),
+             R.cache_shardings(mesh, cache))
+    return fn, (ps, batch, cache), in_sh
+
+
+def build_decode(cfg: ModelConfig, mesh, shape_name: str,
+                 cassandra: bool = True, gamma: int = 5,
+                 opts: frozenset = frozenset()):
+    cass = CassandraConfig(variant=1, gamma=gamma) if cassandra else None
+    rt = Runtime(cfg=cfg, cass=cass, view="target" if cassandra else "plain",
+                 shard=R.act_shard_fn(mesh))
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    ps = _params_struct(cfg, cass)
+    cache = KC.cache_specs(cfg, cass, b, s + 64, packed=cassandra)
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    key = _key_struct()
+    if cassandra:
+        ecfg = EngineConfig(gamma=gamma, greedy=True)
+        fn = lambda p, c, t, k: spec_decode_step(  # noqa: E731
+            rt, p, c, t, k, ecfg)
+    else:
+        fn = lambda p, c, t, k: autoregressive_step(rt, p, c, t, k)  # noqa
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    in_sh = (R.param_shardings(mesh, ps, serving="tp_serve" in opts),
+             R.cache_shardings(mesh, cache),
+             R.batch_shardings(mesh, {"t": tokens})["t"],
+             NamedSharding(mesh, P()))
+    return fn, (ps, cache, tokens, key), in_sh
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, mode: str,
+               opts: frozenset = frozenset()):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return cfg, mesh, build_train(cfg, mesh, shape_name)
+    if kind == "prefill":
+        return cfg, mesh, build_prefill(cfg, mesh, shape_name,
+                                        cassandra=mode == "cassandra")
+    return cfg, mesh, build_decode(cfg, mesh, shape_name,
+                                   cassandra=mode == "cassandra", opts=opts)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             mode: str = "cassandra", verbose: bool = True,
+             opts: frozenset = frozenset()) -> dict:
+    t0 = time.time()
+    cfg, mesh, (fn, structs, in_sh) = build_cell(arch, shape_name,
+                                                 multi_pod, mode, opts)
+    lowered = jax.jit(fn, in_shardings=in_sh).lower(*structs)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    n_dev = mesh.devices.size
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll_b = float(coll["total_bytes"])
+    result = {
+        "arch": arch, "shape": shape_name, "mode": mode,
+        "mesh": "2x16x16" if multi_pod else "16x16", "devices": n_dev,
+        "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_device": {
+            "flops": flops, "bytes_accessed": bytes_acc,
+            "collective_bytes": coll_b,
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll_b / LINK_BW,
+        },
+        "collectives": coll,
+        "model_flops_per_token": model_flops_per_token(cfg),
+    }
+    terms = result["roofline"]
+    result["bottleneck"] = max(terms, key=terms.get)
+    if verbose:
+        print(json.dumps(result, indent=1, default=float))
+    return result
+
+
+def list_cells():
+    from repro.configs import ASSIGNED
+    cells = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape_applicable(cfg, shape):
+                cells.append((arch, shape))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="cassandra",
+                    choices=["cassandra", "bf16"])
+    ap.add_argument("--opt", default="", help="comma list, e.g. tp_serve")
+    ap.add_argument("--out")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for arch, shape in list_cells():
+            print(f"{arch} {shape}")
+        return
+    opts = frozenset(o for o in args.opt.split(",") if o)
+    res = run_cell(args.arch, args.shape, args.multi_pod, args.mode,
+                   opts=opts)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except Exception as e:  # noqa: BLE001 — report failures as data
+        print(json.dumps({"ok": False, "error": f"{type(e).__name__}: {e}"}
+                         )[:2000], file=sys.stderr)
+        raise

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline term extraction from compiled artifacts (EXPERIMENTS.md §Roofline).
+
+XLA's ``cost_analysis`` counts a ``while`` (scan) body ONCE regardless of
+trip count, so the full-depth dry-run numbers undercount layer-stacked
+work. This driver therefore compiles *reduced-depth, fully unrolled*
+variants of each cell (full widths, full batch/seq — only layer counts
+shrink) and fits the per-layer-group cost linearly::
+
+    cost(r_1..r_G) = c0 + Σ_g c_g · r_g
+
+with one point at all-ones, one at all-twos, and one extra point per extra
+group. Extrapolating to the real depths gives HLO-derived FLOPs / bytes /
+collective-bytes for the full model, from the compiled artifact itself.
+Inner chunk loops (flash attention, chunked CE, SSM chunk scan) are also
+unrolled or widened under ``Runtime(unroll=True)`` so nothing hides in a
+while body.
+"""
+import argparse
+import dataclasses
+import json
+import time
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, input_specs, SHAPES
+from repro.configs.base import ModelConfig, layer_groups
+from repro.core.format import CassandraConfig
+from repro.launch import dryrun as DR
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.layers import Runtime
+from repro.serving import kvcache as KC
+from repro.serving.engine import EngineConfig, spec_decode_step, \
+    autoregressive_step
+from repro.sharding import rules as R
+from repro.training import OptConfig, init_opt_state, train_step
+from repro.training.trainer import TrainConfig
+
+
+def _reduced(cfg: ModelConfig, reps: tuple[int, ...]) -> ModelConfig:
+    """Scale each layer group's repeat count to ``reps``.
+
+    The encoder of enc-dec models is an extra pseudo-group carried as the
+    LAST entry of ``reps``.
+    """
+    changes: dict = {}
+    if cfg.is_encdec:
+        changes["n_encoder_layers"] = reps[-1]
+        reps = reps[:-1]
+    groups = layer_groups(cfg)
+    assert len(reps) == len(groups)
+    period = len(cfg.block_pattern)
+    fd = 0
+    n = 0
+    gi = 0
+    if cfg.first_dense_layers:
+        fd = reps[0] * len(groups[0].entries)
+        n += fd
+        gi = 1
+    n += reps[gi] * period if len(groups) > gi else 0
+    changes["n_layers"] = n
+    changes["first_dense_layers"] = fd
+    return dataclasses.replace(cfg, **changes)
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    return len(layer_groups(cfg)) + (1 if cfg.is_encdec else 0)
+
+
+def _full_reps(cfg: ModelConfig) -> tuple[int, ...]:
+    reps = tuple(g.repeats for g in layer_groups(cfg))
+    if cfg.is_encdec:
+        reps = reps + (cfg.n_encoder_layers,)
+    return reps
+
+
+def _rt(cfg: ModelConfig, mesh, cass=None, view="plain", seq=0,
+        opts: frozenset = frozenset()):
+    # chunk sizes >= seq collapse every inner scan to one trip, so no cost
+    # hides in a while body (flash/CE/SSM all become single-step)
+    return Runtime(cfg=cfg, cass=cass, view=view, shard=R.act_shard_fn(mesh),
+                   unroll=True, remat=True,
+                   remat_policy="dots" if "remat_dots" in opts else "full",
+                   attn_chunk_q=max(seq, 4096), attn_chunk_k=max(seq, 4096),
+                   ssm_chunk=max(seq, 64))
+
+
+def _cost_point(arch: str, shape_name: str, mode: str, reps: tuple,
+                mesh, opts: frozenset = frozenset()) -> dict:
+    cfg0 = get_config(arch)
+    cfg = _reduced(cfg0, reps)
+    kind = SHAPES[shape_name]["kind"]
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+
+    if kind == "train":
+        rt = _rt(cfg, mesh, seq=s, opts=opts)
+        big = DR._param_count(cfg0) > 3e10
+        tcfg = TrainConfig(opt=OptConfig(
+            state_dtype="int8" if big else "fp32"))
+        ps = DR._params_struct(cfg, None)
+        os_ = jax.eval_shape(partial(init_opt_state, cfg=tcfg.opt), ps)
+        batch = input_specs(cfg, shape_name)
+        fn = lambda p, o, bt: train_step(rt, p, o, bt, tcfg)  # noqa: E731
+        structs = (ps, os_, batch)
+        in_sh = (R.param_shardings(mesh, ps), R.opt_shardings(mesh, os_),
+                 R.batch_shardings(mesh, batch))
+    elif kind == "prefill":
+        cass = CassandraConfig(variant=1) if mode == "cassandra" else None
+        rt = _rt(cfg, mesh, cass, "target" if cass else "plain", seq=s)
+        ps = DR._params_struct(cfg, cass)
+        cache = KC.cache_specs(cfg, cass, b, s + 64, packed=cass is not None)
+        batch = input_specs(cfg, shape_name)
+        fn = lambda p, bt, c: M.forward_prefill(rt, p, bt, c)  # noqa: E731
+        structs = (ps, batch, cache)
+        in_sh = (R.param_shardings(mesh, ps), R.batch_shardings(mesh, batch),
+                 R.cache_shardings(mesh, cache))
+    else:
+        cass = (CassandraConfig(variant=1, gamma=5)
+                if mode == "cassandra" else None)
+        rt = _rt(cfg, mesh, cass, "target" if cass else "plain")
+        ps = DR._params_struct(cfg, cass)
+        cache = KC.cache_specs(cfg, cass, b, s + 64, packed=cass is not None)
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        key = DR._key_struct()
+        if cass is not None:
+            ecfg = EngineConfig(gamma=5, greedy=True)
+            fn = lambda p, c, t, k: spec_decode_step(  # noqa: E731
+                rt, p, c, t, k, ecfg)
+        else:
+            fn = lambda p, c, t, k: autoregressive_step(  # noqa: E731
+                rt, p, c, t, k)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        structs = (ps, cache, tokens, key)
+        in_sh = (R.param_shardings(mesh, ps, serving="tp_serve" in opts),
+                 R.cache_shardings(mesh, cache),
+                 R.batch_shardings(mesh, {"t": tokens})["t"],
+                 NamedSharding(mesh, P()))
+
+    compiled = jax.jit(fn, in_shardings=in_sh).lower(*structs).compile()
+    cost = compiled.cost_analysis()
+    coll = DR.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll["total_bytes"]),
+            "coll_by_kind": coll["bytes_by_kind"]}
+
+
+def roofline_cell(arch: str, shape_name: str, mode: str = "cassandra",
+                  verbose: bool = True,
+                  opts: frozenset = frozenset()) -> dict:
+    """Fit per-group costs from reduced unrolled compiles; extrapolate."""
+    t0 = time.time()
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=False)
+    g = _n_groups(cfg)
+    points = [tuple([1] * g), tuple([2] * g)]
+    for extra in range(1, g):
+        points.append(tuple(2 if i == extra else 1 for i in range(g)))
+    costs = [_cost_point(arch, shape_name, mode, reps, mesh, opts)
+             for reps in points]
+    # linear fit: metric = c0 + Σ c_g r_g
+    A = np.array([[1.0, *reps] for reps in points])
+    full = np.array([1.0, *_full_reps(cfg)])
+    out = {"arch": arch, "shape": shape_name, "mode": mode,
+           "points": [list(p) for p in points], "fit_s": 0.0}
+    for metric in ("flops", "bytes", "coll"):
+        y = np.array([c[metric] for c in costs])
+        coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+        coef = np.maximum(coef, 0.0)         # costs are nonnegative
+        out[metric] = float(full @ coef)
+        out[f"{metric}_c0"] = float(coef[0])
+        out[f"{metric}_per_group"] = [float(c) for c in coef[1:]]
+    out["roofline"] = {
+        "compute_s": out["flops"] / DR.PEAK_FLOPS,
+        "memory_s": out["bytes"] / DR.HBM_BW,
+        "collective_s": out["coll"] / DR.LINK_BW,
+    }
+    out["bottleneck"] = max(out["roofline"], key=out["roofline"].get)
+    mf = DR.model_flops_per_token(cfg)
+    sh = SHAPES[shape_name]
+    n_dev = mesh.devices.size
+    if sh["kind"] == "train":
+        useful = mf * sh["batch"] * sh["seq"] / n_dev
+    elif sh["kind"] == "prefill":
+        useful = mf / 3.0 * sh["batch"] * sh["seq"] / n_dev
+    else:  # decode: γ+1 target-verified tokens (+γ draft) per step
+        useful = mf / 3.0 * sh["batch"] * 6 / n_dev
+    out["model_flops"] = useful
+    out["useful_flops_ratio"] = useful / max(out["flops"], 1.0)
+    out["wall_s"] = round(time.time() - t0, 1)
+    if verbose:
+        print(json.dumps(out, indent=1, default=float))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mode", default="cassandra",
+                    choices=["cassandra", "bf16"])
+    ap.add_argument("--opt", default="", help="comma list, e.g. tp_serve")
+    ap.add_argument("--out")
+    args = ap.parse_args()
+    opts = frozenset(o for o in args.opt.split(",") if o)
+    res = roofline_cell(args.arch, args.shape, args.mode, opts=opts)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

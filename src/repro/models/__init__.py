@@ -1,0 +1,9 @@
+"""Model zoo: every assigned architecture as a composable JAX module."""
+from repro.models.layers import Runtime  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    init_params,
+    forward_train,
+    forward_prefill,
+    forward_decode,
+    loss_fn,
+)

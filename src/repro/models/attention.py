@@ -1,0 +1,317 @@
+"""Attention: GQA (qk-norm, bias, cross-attn) and MLA (deepseek).
+
+Two compute paths, chosen statically by query length:
+
+* ``_attend_dense`` — one einsum per score/value contraction. Used for
+  decode (q_len = 1 or γ+1) and small sequences. When the KV cache is
+  sequence-sharded (SP decode), XLA partitions the softmax reductions over
+  the ``model`` axis with a pair of small all-reduces — the MagicDec-style
+  distributed decode attention of DESIGN.md §4.
+* ``_attend_flash`` — chunked online-softmax (flash) attention as a scan
+  over query/key chunks, fp32 accumulators. Keeps 32k-prefill / 4k-train
+  peak memory at chunk² instead of S².
+
+MLA runs *naive* (materialised per-head K/V) for full sequences and
+*absorbed* (latent-space scores, MQA-like) for cached decode — the standard
+deployment split; the absorbed path is what makes the 512-d latent cache
+(and Cassandra packing of it) pay off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import Runtime
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core attend primitives
+# ---------------------------------------------------------------------------
+
+def _attend_dense(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array | None, scale: float) -> jax.Array:
+    """q (B,Sq,H,D), k/v (B,Sk,Hkv,Dk/Dv), mask (B,1,Sq,Sk) or None."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def _attend_flash(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                  q_offset: int, chunk_q: int, chunk_k: int) -> jax.Array:
+    """Chunked online-softmax attention (pure-jnp flash).
+
+    q (B,Sq,H,D), k/v (B,Sk,Hkv,D*). Sq % chunk_q == 0, Sk % chunk_k == 0.
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    """
+    b, sq, h, d = q.shape
+    sk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // hkv
+    cq, ck = min(chunk_q, sq), min(chunk_k, sk)
+    while sq % cq:                     # largest divisors <= chunk
+        cq -= 1
+    while sk % ck:
+        ck -= 1
+    nq, nk = sq // cq, sk // ck
+    scale = 1.0 / (d ** 0.5)
+
+    qc = jnp.moveaxis(q.reshape(b, nq, cq, hkv, g, d), 1, 0)   # (nq,B,cq,hkv,g,d)
+    kc = jnp.moveaxis(k.reshape(b, nk, ck, hkv, d), 1, 0)      # (nk,B,ck,hkv,d)
+    vc = jnp.moveaxis(v.reshape(b, nk, ck, hkv, dv), 1, 0)
+
+    q_pos_base = jnp.arange(nq) * cq + q_offset
+
+    def q_step(_, xs):
+        qi, qbase = xs                                         # (B,cq,hkv,g,d)
+        qpos = qbase + jnp.arange(cq)
+
+        def kv_step(carry, ys):
+            m, l, acc = carry
+            kj, vj, kbase = ys
+            kpos = kbase + jnp.arange(ck)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            if causal:
+                cm = qpos[:, None] >= kpos[None, :]            # (cq,ck)
+                s = jnp.where(cm[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dv), jnp.float32)
+        kbases = jnp.arange(nk) * ck
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kbases))
+        out = acc / jnp.maximum(l[..., None], 1e-30)           # (b,hkv,g,cq,dv)
+        return None, jnp.moveaxis(out, 3, 1)                   # (b,cq,hkv,g,dv)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, q_pos_base))     # (nq,b,cq,...)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def causal_mask(sq: int, sk: int, q_offset) -> jax.Array:
+    """(1,1,Sq,Sk) bool: query at abs pos q_offset+i sees keys 0..pos."""
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    return (qpos[:, None] >= kpos[None, :])[None, None]
+
+
+def full_mask(prefix_valid: jax.Array, sq: int) -> jax.Array:
+    """(B|1,1,Sq,P+Sq): prefix keys per validity mask + causal among new.
+
+    ``prefix_valid`` is (P,) or (B,P) — per-batch cache lengths arise in
+    batched speculative decoding where sequences accept different counts.
+    """
+    p = prefix_valid.shape[-1]
+    b = prefix_valid.shape[0] if prefix_valid.ndim == 2 else 1
+    pm = jnp.broadcast_to(
+        prefix_valid.reshape(b, 1, 1, p), (b, 1, sq, p))
+    tri = jnp.broadcast_to(causal_mask(sq, sq, 0), (b, 1, sq, sq))
+    return jnp.concatenate([pm, tri], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_project_kv(rt: Runtime, p: dict, x: jax.Array,
+                   positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """K/V projections (+qk-norm on K, +rope). Returns (k, v) (B,S,Hkv,hd)."""
+    cfg = rt.cfg
+    b, s, _ = x.shape
+    hd = cfg.hd
+    k = L.dense(rt, p["wk"], x, "attn.wk").reshape(b, s, cfg.n_kv_heads, hd)
+    v = L.dense(rt, p["wv"], x, "attn.wv").reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if positions is not None:
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def gqa_project_q(rt: Runtime, p: dict, x: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    cfg = rt.cfg
+    b, s, _ = x.shape
+    q = L.dense(rt, p["wq"], x, "attn.wq").reshape(b, s, cfg.n_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    if positions is not None:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def gqa_attention(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array,
+                  *, causal: bool = True,
+                  prefix_kv: tuple[jax.Array, jax.Array] | None = None,
+                  prefix_valid: jax.Array | None = None,
+                  cross_kv: tuple[jax.Array, jax.Array] | None = None,
+                  ) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """Full GQA layer. Returns (out, new_kv) — new_kv is None for cross-attn.
+
+    * full-seq (train/prefill): ``prefix_kv`` and ``cross_kv`` None.
+    * cached decode: ``prefix_kv`` = materialised (k, v) (B,P,Hkv,hd) prefix
+      keys (packed-cache view ++ draft scratch, assembled by the caller)
+      with ``prefix_valid`` (P,) bool; new tokens' K/V are computed here,
+      attended as extra trailing keys, and returned for the caller to
+      append/commit.
+    * cross-attention: ``cross_kv`` = encoder-derived (k, v); not causal.
+    """
+    cfg = rt.cfg
+    b, sq, _ = x.shape
+    scale = 1.0 / (cfg.hd ** 0.5)
+    q = gqa_project_q(rt, p, x, positions)
+
+    if cross_kv is not None:
+        q = rt.shard_act(q, ("batch", None, "heads", None))
+        k, v = cross_kv
+        out = _attend_dense(q, k, v, None, scale)
+        new_kv = None
+    elif prefix_kv is not None:
+        # sequence-parallel decode: q replicated over `model`, prefix keys
+        # token-sharded; XLA partitions the softmax with small psums.
+        # (Head-sharding q here forces an all-gather of the whole KV view
+        # per layer per step — §Perf iteration A1/A2.)
+        q = rt.shard_act(q, ("batch", None, None, None))
+        new_k, new_v = gqa_project_kv(rt, p, x, positions)
+        pk, pv = prefix_kv
+        pk = rt.shard_act(pk, ("batch", "seq_kv", None, None))
+        pv = rt.shard_act(pv, ("batch", "seq_kv", None, None))
+        k = jnp.concatenate([pk, new_k.astype(pk.dtype)], axis=1)
+        v = jnp.concatenate([pv, new_v.astype(pv.dtype)], axis=1)
+        mask = full_mask(prefix_valid, sq)
+        out = _attend_dense(q, k, v, mask, scale)
+        new_kv = (new_k, new_v)
+    else:
+        k, v = gqa_project_kv(rt, p, x, positions)
+        k = rt.shard_act(k, ("batch", None, "kv_heads", None))
+        v = rt.shard_act(v, ("batch", None, "kv_heads", None))
+        if sq > 2048:
+            out = _attend_flash(q, k, v, causal=causal, q_offset=0,
+                                chunk_q=rt.attn_chunk_q,
+                                chunk_k=rt.attn_chunk_k)
+        else:
+            mask = causal_mask(sq, k.shape[1], 0) if causal else None
+            out = _attend_dense(q, k, v, mask, scale)
+        new_kv = (k, v)
+
+    out = out.reshape(b, sq, cfg.n_heads * out.shape[-1])
+    return L.dense(rt, p["wo"], out, "attn.wo"), new_kv
+
+
+# ---------------------------------------------------------------------------
+# MLA block (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def mla_latent(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """The cached quantities: latent c (B,S,kv_lora) + k_rope (B,S,rope)."""
+    cfg = rt.cfg
+    kv_full = L.dense(rt, p["kv_a"], x, "mla.kv_a")
+    c = L.rmsnorm(p["kv_a_norm"], kv_full[..., :cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv_full[..., cfg.kv_lora_rank:]
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
+                          cfg.rope_theta)[:, :, 0]
+    return c, k_rope
+
+
+def _mla_q(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array
+           ) -> tuple[jax.Array, jax.Array]:
+    cfg = rt.cfg
+    b, s, _ = x.shape
+    ql = L.rmsnorm(p["q_a_norm"], L.dense(rt, p["q_a"], x, "mla.q_a"),
+                   cfg.norm_eps)
+    q = L.dense(rt, p["q_b"], ql, "mla.q_b").reshape(
+        b, s, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = L.apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _kv_b_split(rt: Runtime, p: dict) -> tuple[jax.Array, jax.Array]:
+    cfg = rt.cfg
+    w = L.resolve_weight(rt, p["kv_b"]["w"], "mla.kv_b")
+    w = w.reshape(cfg.kv_lora_rank, cfg.n_heads,
+                  cfg.qk_nope_dim + cfg.v_head_dim)
+    return w[..., :cfg.qk_nope_dim], w[..., cfg.qk_nope_dim:]   # w_uk, w_uv
+
+
+def mla_attention(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array,
+                  *, causal: bool = True,
+                  prefix_latent: tuple[jax.Array, jax.Array] | None = None,
+                  prefix_valid: jax.Array | None = None,
+                  ) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """MLA layer. Cache = (c, k_rope) latents, NOT per-head K/V.
+
+    Full-seq: naive (materialise per-head k,v from the latent — cheaper
+    scores). Cached decode (``prefix_latent`` = (c, kr) prefix from the
+    cache view ++ scratch): absorbed (scores in latent space).
+    """
+    cfg = rt.cfg
+    b, sq, _ = x.shape
+    scale = 1.0 / ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5)
+    q_nope, q_rope = _mla_q(rt, p, x, positions)
+    new_c, new_kr = mla_latent(rt, p, x, positions)
+
+    if prefix_latent is None:
+        # naive path: per-head K/V from latent
+        w_uk, w_uv = _kv_b_split(rt, p)
+        k_nope = jnp.einsum("bsl,lhn->bshn", new_c.astype(jnp.float32),
+                            w_uk.astype(jnp.float32)).astype(x.dtype)
+        vv = jnp.einsum("bsl,lhn->bshn", new_c.astype(jnp.float32),
+                        w_uv.astype(jnp.float32)).astype(x.dtype)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(new_kr[:, :, None],
+                                      (b, sq, cfg.n_heads, cfg.qk_rope_dim))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = rt.shard_act(q, ("batch", None, "heads", None))
+        if sq > 2048:
+            out = _attend_flash(q, k, vv, causal=causal, q_offset=0,
+                                chunk_q=rt.attn_chunk_q,
+                                chunk_k=rt.attn_chunk_k)
+        else:
+            mask = causal_mask(sq, sq, 0) if causal else None
+            out = _attend_dense(q, k, vv, mask, scale)
+    else:
+        # absorbed path over the latent cache (sequence-parallel: latents
+        # token-sharded, q replicated — mirrors the GQA decode layout)
+        w_uk, w_uv = _kv_b_split(rt, p)
+        pc, pkr = prefix_latent
+        pc = rt.shard_act(pc, ("batch", "seq_kv", None))
+        pkr = rt.shard_act(pkr, ("batch", "seq_kv", None))
+        c_all = jnp.concatenate([pc, new_c.astype(pc.dtype)], axis=1)
+        kr_all = jnp.concatenate([pkr, new_kr.astype(pkr.dtype)], axis=1)
+        q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))         # (B,sq,H,lora)
+        s_nope = jnp.einsum("bqhl,bkl->bhqk", q_eff,
+                            c_all.astype(jnp.float32))
+        s_rope = jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                            kr_all.astype(jnp.float32))
+        scores = (s_nope + s_rope) * scale
+        mask = full_mask(prefix_valid, sq)
+        scores = jnp.where(mask, scores, NEG_INF)
+        pattn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkl->bqhl", pattn,
+                         c_all.astype(jnp.float32))          # (B,sq,H,lora)
+        out = jnp.einsum("bqhl,lhn->bqhn", ctx, w_uv.astype(jnp.float32))
+        out = out.astype(x.dtype)
+
+    out = out.reshape(b, sq, cfg.n_heads * cfg.v_head_dim)
+    return L.dense(rt, p["wo"], out, "mla.wo"), (new_c, new_kr)

@@ -1,0 +1,141 @@
+"""Mamba-1 selective SSM block (falcon-mamba, jamba mixer).
+
+The recurrence ``h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t`` is evaluated as a
+chunked associative scan: an outer ``lax.scan`` over sequence chunks carries
+the (B, d_inner, n) state, an inner ``lax.associative_scan`` parallelises
+within the chunk (log-depth — MXU/VPU friendly), and the per-step output
+``y_t = h_t · C_t`` is contracted inside the chunk so the full (S, d_inner,
+n) state history is never materialised.
+
+Decode carries ``(conv_state, h)``: the last (d_conv-1) post-projection
+inputs plus the SSM state. There is no KV cache — Cassandra's KV technique
+is inapplicable here (DESIGN.md §Arch-applicability); weights-only
+speculation still applies through the packed projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import Runtime
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def _selective_scan(a: jax.Array, b: jax.Array, c: jax.Array, h0: jax.Array,
+                    chunk: int, with_states: bool = False,
+                    unroll: bool = False
+                    ) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """a,b (B,S,di,n) fp32, c (B,S,n), h0 (B,di,n).
+
+    Returns (y (B,S,di), h_final, h_all?). ``with_states`` additionally
+    returns h at every position (decode rollback — small q only).
+    """
+    bsz, s, di, n = a.shape
+    ch = min(chunk, s)
+    while s % ch:                      # largest divisor <= chunk
+        ch -= 1
+    nc = s // ch
+    a_c = jnp.moveaxis(a.reshape(bsz, nc, ch, di, n), 1, 0)
+    b_c = jnp.moveaxis(b.reshape(bsz, nc, ch, di, n), 1, 0)
+    c_c = jnp.moveaxis(c.reshape(bsz, nc, ch, n), 1, 0)
+
+    def step(h, xs):
+        ac, bc, cc = xs
+        ca, cb = jax.lax.associative_scan(_combine, (ac, bc), axis=1)
+        h_all = ca * h[:, None] + cb                       # (B,ch,di,n)
+        y = jnp.einsum("btdn,btn->btd", h_all, cc)
+        return h_all[:, -1], (y, h_all if with_states else None)
+
+    if unroll:                                 # roofline cost extraction
+        h, ys, hs = h0, [], []
+        for i in range(nc):
+            h, (yy, hh) = step(h, (a_c[i], b_c[i], c_c[i]))
+            ys.append(yy)
+            hs.append(hh)
+        h_fin = h
+        y = jnp.stack(ys)
+        h_states = jnp.stack(hs) if with_states else None
+    else:
+        h_fin, (y, h_states) = jax.lax.scan(step, h0, (a_c, b_c, c_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(bsz, s, di)
+    if with_states:
+        h_states = jnp.moveaxis(h_states, 0, 1).reshape(bsz, s, di, n)
+    return y, h_fin, h_states
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 prepend: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B,S,di), w (dc,di). Returns (y, new_state)."""
+    dc = w.shape[0]
+    if prepend is None:
+        prepend = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xw = jnp.concatenate([prepend, x], axis=1)             # (B, S+dc-1, di)
+    y = sum(xw[:, i:i + x.shape[1]] * w[i][None, None] for i in range(dc))
+    new_state = xw[:, -(dc - 1):]
+    return y + bias[None, None], new_state
+
+
+def mamba(rt: Runtime, p: dict, u: jax.Array,
+          state: tuple[jax.Array, jax.Array] | None = None,
+          valid_len: int | None = None, with_states: bool = False,
+          ) -> tuple[jax.Array, tuple[jax.Array, jax.Array], dict | None]:
+    """Mamba-1 mixer. u (B,S,d_model). state = (conv_state, h) or None.
+
+    Returns (out (B,S,d_model), (conv_state, h), extras). The state always
+    reflects the end of this call so prefill→decode continuation is
+    seamless. ``with_states`` (decode rollback) adds extras = {"h_all"
+    (B,S,di,n), "conv_win" (B,S+dc-1,di)} so the committed state after n
+    accepted tokens can be reconstructed by slicing.
+    """
+    cfg = rt.cfg
+    bsz, s, _ = u.shape
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_r
+
+    xz = L.dense(rt, p["in_proj"], u, "ssm.in_proj")       # (B,S,2di)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = rt.shard_act(x, ("batch", None, "ffn"))
+
+    conv_state = state[0] if state is not None else None
+    pre_conv_x = x
+    x, new_conv = _causal_conv(x, p["conv_w"].astype(x.dtype),
+                               p["conv_b"].astype(x.dtype), conv_state)
+    x = jax.nn.silu(x.astype(jnp.float32)).astype(u.dtype)
+
+    dbc = L.dense(rt, p["x_proj"], x, "ssm.x_proj")        # (B,S,dtr+2n)
+    dt_low = dbc[..., :dtr]
+    b_mat = dbc[..., dtr:dtr + n].astype(jnp.float32)      # (B,S,n)
+    c_mat = dbc[..., dtr + n:].astype(jnp.float32)
+    dt = L.dense(rt, p["dt_proj"], dt_low, "ssm.dt_proj").astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32)[None, None])
+    if valid_len is not None and valid_len < s:
+        # padded tail: dt=0 -> a=1, b=0 -> state passes through unchanged
+        pos_ok = (jnp.arange(s) < valid_len)[None, :, None]
+        dt = jnp.where(pos_ok, dt, 0.0)
+
+    a_mat = -jnp.exp(p["A_log"].astype(jnp.float32))       # (di,n)
+    xf = x.astype(jnp.float32)
+    a_bar = jnp.exp(dt[..., None] * a_mat[None, None])     # (B,S,di,n)
+    b_bar = (dt * xf)[..., None] * b_mat[:, :, None, :]    # (B,S,di,n)
+
+    h0 = (state[1].astype(jnp.float32) if state is not None
+          else jnp.zeros((bsz, di, n), jnp.float32))
+    y, h_fin, h_all = _selective_scan(a_bar, b_bar, c_mat, h0, rt.ssm_chunk,
+                                      with_states=with_states,
+                                      unroll=rt.unroll)
+
+    y = y + p["D"].astype(jnp.float32)[None, None] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    out = L.dense(rt, p["out_proj"], y, "ssm.out_proj")
+    extras = None
+    if with_states:
+        prep = (conv_state if conv_state is not None else
+                jnp.zeros((bsz, cfg.ssm_conv - 1, di), pre_conv_x.dtype))
+        conv_win = jnp.concatenate([prep, pre_conv_x], axis=1)
+        extras = {"h_all": h_all, "conv_win": conv_win}
+    return out, (new_conv, h_fin), extras

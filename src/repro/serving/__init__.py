@@ -1,0 +1,5 @@
+"""Serving: KV cache (Cassandra-packed), prefill, decode, speculative engine.
+
+Import submodules explicitly (``repro.serving.engine``, ``….kvcache``) —
+this package init stays empty to avoid model↔serving import cycles.
+"""

@@ -1,0 +1,282 @@
+"""Speculative serving engine — the paper's draft→verify cycle (Fig. 4b/c).
+
+One ``spec_decode_step`` per cycle, fully under jit:
+
+1. γ draft steps with ``view="draft"``: only speculation data is read
+   (packed weights' draft reconstruction + draft view of the packed KV
+   cache). Draft tokens' K/V live in a γ-slot scratch, SSM draft state in a
+   scratch copy.
+2. One batched verify pass with ``view="target"`` over the γ+1 tokens:
+   speculation + verification data reconstruct the exact model (bit-exact
+   for Cassandra-1), and the pass recomputes exact K/V / SSM states for the
+   drafted positions.
+3. Acceptance (greedy exact-match or paper Eq. 1 rejection sampling) —
+   per-sequence accepted counts ``n``.
+4. Commit: the *target's* K/V for the accepted prefix are encoded online
+   (paper's encoder, Fig. 8b) and appended at per-row offsets; SSM states
+   roll back to position n via the returned state history. Rejected-slot
+   data stays as masked stale garbage until overwritten.
+
+The same machinery with γ=0 is the autoregressive baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, layer_groups
+from repro.core import speculative as SP
+from repro.core.format import CassandraConfig
+from repro.models import model as M
+from repro.models.layers import Runtime
+from repro.serving import kvcache as KC
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    gamma: int = 5
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Scratch (draft-side transient state)
+# ---------------------------------------------------------------------------
+
+def make_scratch(cfg: ModelConfig, cache: dict, gamma: int) -> list:
+    """γ-slot KV scratch per attn entry + SSM draft-state copies."""
+    groups = []
+    for gi, g in enumerate(layer_groups(cfg)):
+        gdict = {}
+        for j, entry in enumerate(g.entries):
+            ekey = f"e{j}"
+            centry = cache["dec"][gi][ekey]
+            if entry[0] == "a":
+                leaf = jax.tree_util.tree_leaves(centry)[0]
+                r, b = leaf.shape[0], leaf.shape[1]
+                if cfg.mla:
+                    gdict[ekey] = {
+                        "c": jnp.zeros((r, b, gamma, cfg.kv_lora_rank),
+                                       jnp.bfloat16),
+                        "kr": jnp.zeros((r, b, gamma, cfg.qk_rope_dim),
+                                        jnp.bfloat16)}
+                else:
+                    gdict[ekey] = {
+                        "k": jnp.zeros((r, b, gamma, cfg.n_kv_heads, cfg.hd),
+                                       jnp.bfloat16),
+                        "v": jnp.zeros((r, b, gamma, cfg.n_kv_heads, cfg.hd),
+                                       jnp.bfloat16)}
+            else:
+                gdict[ekey] = {"conv": centry["conv"], "h": centry["h"]}
+        groups.append(gdict)
+    return groups
+
+
+def _scratch_write(scratch: list, updates: list, slot: int) -> list:
+    """Place draft-step updates into scratch slot ``slot`` (static)."""
+    out = []
+    for gdict, gupd in zip(scratch, updates):
+        godict = dict(gdict)
+        for ekey, upd in gupd.items():
+            se = dict(godict[ekey])
+            if "k" in upd:
+                for nm in ("k", "v"):
+                    se[nm] = jax.lax.dynamic_update_slice_in_dim(
+                        se[nm], upd[nm].astype(se[nm].dtype), slot, axis=2)
+            elif "c" in upd:
+                for nm in ("c", "kr"):
+                    se[nm] = jax.lax.dynamic_update_slice_in_dim(
+                        se[nm], upd[nm].astype(se[nm].dtype), slot, axis=2)
+            elif "conv" in upd:
+                se["conv"] = upd["conv"].astype(se["conv"].dtype)
+                se["h"] = upd["h"]
+            godict[ekey] = se
+        out.append(godict)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Commit (target-side cache update with rollback)
+# ---------------------------------------------------------------------------
+
+def commit(rt: Runtime, cache: dict, updates: list, n: jax.Array) -> dict:
+    """Append target-recomputed state for n+1 accepted tokens per row."""
+    cfg, cass = rt.cfg, rt.cass
+    book = KC.cache_codebook(cache)
+    packed = book is not None
+    length = cache["length"]                          # (B,)
+    new_dec = []
+    for gi, gupd in enumerate(updates):
+        gcache = dict(cache["dec"][gi])
+        for ekey, upd in gupd.items():
+            centry = dict(gcache[ekey])
+            if "k" in upd or "c" in upd:
+                items = (("k", cfg.hd), ("v", cfg.hd)) if "k" in upd else \
+                    (("c", cfg.kv_lora_rank), ("kr", cfg.qk_rope_dim))
+                for nm, d in items:
+                    new = upd[nm]                     # (R,B,q,…)
+                    if packed:
+                        new = jax.vmap(
+                            lambda x, d=d: KC.encode_store(cass, x, d, book)
+                        )(new)
+                    centry[nm] = jax.vmap(
+                        lambda c, nw: KC.append_store_batched(c, nw, length)
+                    )(centry[nm], new)
+            elif "h_all" in upd:
+                # SSM rollback: state after accepting n+1 tokens
+                h_all = upd["h_all"]                  # (R,B,q,di,ns)
+                idx = n.reshape(1, -1, 1, 1, 1)
+                centry["h"] = jnp.take_along_axis(
+                    h_all, idx, axis=2)[:, :, 0]
+                win = upd["conv_win"]                 # (R,B,dc-1+q,di)
+                dc = cfg.ssm_conv
+                widx = (n.reshape(1, -1, 1, 1) + 1
+                        + jnp.arange(dc - 1).reshape(1, 1, -1, 1))
+                centry["conv"] = jnp.take_along_axis(
+                    win, jnp.broadcast_to(
+                        widx, (win.shape[0], win.shape[1], dc - 1,
+                               win.shape[3])), axis=2
+                ).astype(centry["conv"].dtype)
+            gcache[ekey] = centry
+        new_dec.append(gcache)
+    out = dict(cache)
+    out["dec"] = new_dec
+    out["length"] = length + n.astype(length.dtype) + 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode steps
+# ---------------------------------------------------------------------------
+
+def spec_decode_step(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
+                     key: jax.Array, ecfg: EngineConfig
+                     ) -> tuple[SP.AcceptResult, dict]:
+    """One speculative cycle. cur_tokens (B,1) = last committed token."""
+    cfg = rt.cfg
+    gamma = ecfg.gamma
+    rt_d = dataclasses.replace(rt, view="draft" if rt.cass else "plain")
+    rt_t = dataclasses.replace(rt, view="target" if rt.cass else "plain")
+
+    scratch = make_scratch(cfg, cache, gamma)
+    # decode the draft view of the packed cache ONCE for all γ steps
+    draft_view = M.materialize_cache_view(rt_d, cache)
+    tok = cur_tokens
+    draft_tokens = []
+    draft_logits = []
+    for i in range(gamma):
+        logits, upd = M.forward_decode(rt_d, params, tok, cache,
+                                       scratch=scratch,
+                                       scratch_len=jnp.int32(i),
+                                       cache_view=draft_view)
+        scratch = _scratch_write(scratch, upd, i)
+        lg = logits[:, -1]
+        if ecfg.greedy:
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(
+                sub, lg / ecfg.temperature).astype(jnp.int32)
+        draft_tokens.append(nxt)
+        draft_logits.append(lg)
+        tok = nxt[:, None]
+    draft_tokens = jnp.stack(draft_tokens, axis=1)        # (B,γ)
+
+    # batched verification over [cur ++ drafts]
+    ver_tokens = jnp.concatenate([cur_tokens, draft_tokens], axis=1)
+    t_logits, t_upd = M.forward_decode(rt_t, params, ver_tokens, cache)
+
+    if ecfg.greedy:
+        res = SP.greedy_accept(draft_tokens, t_logits)
+    else:
+        dprobs = jax.nn.softmax(
+            jnp.stack(draft_logits, axis=1) / ecfg.temperature, axis=-1)
+        tprobs = jax.nn.softmax(t_logits / ecfg.temperature, axis=-1)
+        key, sub = jax.random.split(key)
+        res = SP.rejection_sample(draft_tokens, dprobs, tprobs, sub)
+
+    cache = commit(rt, cache, t_upd, res.n_accepted)
+    return res, cache
+
+
+def autoregressive_step(rt: Runtime, params, cache: dict,
+                        cur_tokens: jax.Array, key: jax.Array,
+                        greedy: bool = True, temperature: float = 1.0
+                        ) -> tuple[jax.Array, dict]:
+    """bf16-baseline decode: one token per full-model read."""
+    rt_t = dataclasses.replace(rt, view="target" if rt.cass else "plain")
+    logits, upd = M.forward_decode(rt_t, params, cur_tokens, cache)
+    lg = logits[:, -1]
+    if greedy:
+        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    else:
+        nxt = jax.random.categorical(key, lg / temperature).astype(jnp.int32)
+    cache = commit(rt, cache, upd, jnp.zeros(lg.shape[0], jnp.int32))
+    return nxt, cache
+
+
+# ---------------------------------------------------------------------------
+# Host-side generation loop (examples / tests / benches)
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Convenience wrapper: prefill once, then speculative cycles."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 cass: CassandraConfig | None = None,
+                 ecfg: EngineConfig = EngineConfig(), rt_extra: dict = {}):
+        self.cfg, self.cass, self.ecfg = cfg, cass, ecfg
+        self.params = params
+        self.rt = Runtime(cfg=cfg, cass=cass,
+                          view="target" if cass else "plain", **rt_extra)
+        self._prefill = jax.jit(
+            lambda p, b, c: M.forward_prefill(self.rt, p, b, c))
+        self._spec = jax.jit(partial(spec_decode_step, self.rt,
+                                     ecfg=self.ecfg), donate_argnums=(1,))
+        self._auto = jax.jit(partial(autoregressive_step, self.rt),
+                             donate_argnums=(1,))
+
+    def generate(self, batch: dict, max_new: int, key=None,
+                 speculative: bool = True):
+        """Returns (tokens (B,≥max_new), stats)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        b, s = batch["tokens"].shape
+        pad = self.ecfg.gamma + 1
+        s_total = batch["tokens"].shape[1] + (
+            self.cfg.frontend_tokens if self.cfg.frontend == "vision" else 0)
+        s_max = s_total + max_new + pad
+        cache = KC.init_cache(self.cfg, self.cass, b, s_max,
+                              packed=self.cass is not None)
+        logits, cache = self._prefill(self.params, batch, cache)
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out_tokens = [cur[:, 0]]
+        import numpy as np
+        committed = np.ones(b)              # the prefill-argmax token
+        cycles = accepted = drafted = 0
+        while committed.max() < max_new:
+            key, sub = jax.random.split(key)
+            if speculative:
+                res, cache = self._spec(self.params, cache, cur, sub)
+                # harvest: accepted prefix + next token per row (-1 = pad)
+                for j in range(self.ecfg.gamma + 1):
+                    out_tokens.append(jnp.where(res.valid[:, j],
+                                                res.tokens[:, j], -1))
+                n = np.asarray(res.n_accepted)
+                committed += n + 1
+                accepted += int(n.sum())
+                drafted += self.ecfg.gamma * b
+                cycles += 1
+                cur = res.next_token[:, None]
+            else:
+                nxt, cache = self._auto(self.params, cache, cur, sub)
+                out_tokens.append(nxt)
+                committed += 1
+                cycles += 1
+                cur = nxt[:, None]
+        stats = {"cycles": cycles,
+                 "tokens_per_cycle": float(committed.mean()) / max(cycles, 1),
+                 "acceptance": accepted / drafted if drafted else None}
+        return jnp.stack(out_tokens, axis=1), stats

@@ -1,0 +1,230 @@
+"""KV cache: plain bf16 or Cassandra-packed (speculation + verification).
+
+The packed cache is the paper's §IV-B applied per (token, head) vector:
+magnitude top-k pruning (Mustafar-style), mantissa truncation, and exponent
+compression (unary for Cassandra-1 / MX for Cassandra-2). Draft decode reads
+only the speculation leaves; verification reads both and reconstructs the
+target KV **bit-exactly** (corr_bits=8 online guarantees exactness for any
+per-token dynamic range).
+
+The exponent codebook is cache-global and stationary — per the hardware
+design, the encoder keeps the frequency-ranked book in registers. It is
+computed offline per model from calibration KV (the distribution is narrow
+and stable, paper Fig. 6); losslessness never depends on the book (a bad
+book only shifts blocks into delta mode, which corr_bits=8 corrects).
+
+Cache layout (pytree; R = scan repeats of the layer group):
+
+  attn  (GQA)   {"k": store, "v": store}           store leaf (R,B,S,Hkv,1,*)
+  attn  (MLA)   {"c": store, "kr": store}          latent + rope, (R,B,S,1,*)
+  ssm           {"conv": (R,B,dc-1,di), "h": (R,B,di,n)}    never packed
+  cross (enc-dec) {"ck": (R,B,Senc,H,hd), "cv": …}  plain bf16 (computed once)
+
+plain store = bf16 array; packed store = {"spec": {...}, "verif": {...}}.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, layer_groups
+from repro.core import bitops, format as fmt
+from repro.core.format import CassandraConfig
+
+ONLINE_CORR_BITS = 8
+
+
+# ---------------------------------------------------------------------------
+# Codebook
+# ---------------------------------------------------------------------------
+
+def default_kv_codebook() -> tuple[jax.Array, jax.Array]:
+    """Generic frequency ranking: exponents ordered by distance from 125.
+
+    Real KV magnitudes cluster below 1.0 (exp ≈ 120–127); ranking by
+    |e - 125| with the smaller exponent first on ties matches the measured
+    distribution closely enough that mode-0 dominates.
+    """
+    import numpy as np
+    center = 125
+    order = sorted(range(256), key=lambda e: (abs(e - center), e))
+    exp_of_rank = np.array(order, dtype=np.uint8)
+    rank_of_exp = np.zeros(256, dtype=np.uint8)
+    for r, e in enumerate(order):
+        rank_of_exp[e] = min(r, 255)
+    return jnp.asarray(exp_of_rank), jnp.asarray(rank_of_exp)
+
+
+def calibrate_kv_codebook(kv_samples: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Frequency-ranked codebook from calibration K/V tensors."""
+    from repro.core import coding
+    _, exps, _ = bitops.split_fields(kv_samples.astype(jnp.bfloat16))
+    exp_of_rank, rank_of_exp = coding.build_codebook(exps)
+    return exp_of_rank.astype(jnp.uint8), rank_of_exp
+
+
+def cache_codebook(cache: dict) -> tuple[jax.Array, jax.Array] | None:
+    if "book_exp_of_rank" not in cache:
+        return None
+    return cache["book_exp_of_rank"], cache["book_rank_of_exp"]
+
+
+# ---------------------------------------------------------------------------
+# Per-vector codec (block = vector dim)
+# ---------------------------------------------------------------------------
+
+def is_packed(store) -> bool:
+    return isinstance(store, dict) and "spec" in store
+
+
+def _keep(cass: CassandraConfig, d: int) -> int:
+    return cass.kv_keep(d)
+
+
+@partial(jax.jit, static_argnames=("cass", "d"))
+def encode_store(cass: CassandraConfig, x: jax.Array, d: int,
+                 codebook: tuple[jax.Array, jax.Array]) -> dict:
+    """Pack (..., d) bf16 vectors into a {"spec", "verif"} store."""
+    scores = jnp.abs(x.astype(jnp.float32))
+    spec, verif = fmt.format_tensor(
+        x, scores, cass, d, _keep(cass, d), fmt.kv_group(cass, d),
+        cass.kv_trunc, codebook=codebook, corr_bits=ONLINE_CORR_BITS,
+        pruned_raw=True)
+    return {"spec": spec, "verif": verif}
+
+
+@partial(jax.jit, static_argnames=("cass", "d", "view"))
+def read_store(cass: CassandraConfig, store, d: int, view: str,
+               codebook: tuple[jax.Array, jax.Array] | None) -> jax.Array:
+    """Materialise dense (..., d) bf16 from a store per the runtime view."""
+    if not is_packed(store):
+        return store
+    if view == "draft":
+        out = fmt.draft_tensor(store["spec"], cass, d, _keep(cass, d),
+                               fmt.kv_group(cass, d), cass.kv_trunc, d,
+                               codebook=codebook, corr_bits=ONLINE_CORR_BITS)
+    else:
+        out = fmt.target_tensor(store["spec"], store["verif"], cass, d,
+                                _keep(cass, d), fmt.kv_group(cass, d),
+                                cass.kv_trunc, d, codebook=codebook,
+                                corr_bits=ONLINE_CORR_BITS)
+    # format_tensor blocks the last dim: (..., NB=1, d) -> (..., d)
+    return out.reshape(*store["spec"]["bitmap"].shape[:-2], d)
+
+
+def append_store(store, new_store, at) -> dict:
+    """dynamic_update_slice every leaf along the S axis (axis 1 of B,S,…)."""
+    def upd(c, n):
+        return jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype), at,
+                                                   axis=1)
+    if not is_packed(store):
+        return upd(store, new_store)
+    return jax.tree.map(upd, store, new_store)
+
+
+def append_store_batched(store, new_store, at: jax.Array) -> dict:
+    """Per-batch append: leaf (B,S,…) gets new (B,q,…) at row offsets ``at``.
+
+    Batched speculative decoding accepts a different count per sequence, so
+    each row writes at its own cache offset. Slots beyond a row's committed
+    length hold stale data masked out by the validity mask until
+    overwritten.
+    """
+    def upd(c, n):
+        b, q = n.shape[0], n.shape[1]
+        pos = at[:, None] + jnp.arange(q)[None, :]
+        return c.at[jnp.arange(b)[:, None], pos].set(n.astype(c.dtype))
+    if not is_packed(store):
+        return upd(store, new_store)
+    return jax.tree.map(upd, store, new_store)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _entry_kind(cfg: ModelConfig, entry: str) -> str:
+    if entry[0] == "a":
+        return "mla" if cfg.mla else "gqa"
+    return "ssm"
+
+
+def _entry_struct(cfg: ModelConfig, cass: CassandraConfig | None,
+                  kind: str, b: int, s_max: int, packed: bool,
+                  book) -> dict:
+    """ShapeDtypeStruct tree of one cache entry (no allocation)."""
+
+    def store_struct(shape, d):
+        if not packed:
+            return jax.ShapeDtypeStruct((*shape, d), jnp.bfloat16)
+        dummy = jax.ShapeDtypeStruct((*shape, d), jnp.bfloat16)
+        return jax.eval_shape(
+            lambda x, bk: encode_store(cass, x, d, bk), dummy, book)
+
+    if kind == "gqa":
+        return {"k": store_struct((b, s_max, cfg.n_kv_heads), cfg.hd),
+                "v": store_struct((b, s_max, cfg.n_kv_heads), cfg.hd)}
+    if kind == "mla":
+        return {"c": store_struct((b, s_max), cfg.kv_lora_rank),
+                "kr": store_struct((b, s_max), cfg.qk_rope_dim)}
+    if kind == "ssm":
+        return {"conv": jax.ShapeDtypeStruct(
+                    (b, cfg.ssm_conv - 1, cfg.d_inner), jnp.bfloat16),
+                "h": jax.ShapeDtypeStruct(
+                    (b, cfg.d_inner, cfg.ssm_state), jnp.float32)}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, cass: CassandraConfig | None,
+                b: int, s_max: int, packed: bool) -> dict:
+    """ShapeDtypeStruct pytree of the full cache (dry-run input specs)."""
+    book = (jax.ShapeDtypeStruct((256,), jnp.uint8),
+            jax.ShapeDtypeStruct((256,), jnp.uint8))
+
+    def stack(tree, r):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((r, *x.shape), x.dtype), tree)
+
+    cache: dict = {"dec": [],
+                   "length": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    for g in layer_groups(cfg):
+        gdict = {}
+        for j, entry in enumerate(g.entries):
+            kind = _entry_kind(cfg, entry)
+            gdict[f"e{j}"] = _entry_struct(cfg, cass, kind, b, s_max,
+                                           packed and kind != "ssm", book)
+        cache["dec"].append(stack(gdict, g.repeats))
+    if cfg.cross_attention:
+        senc = cfg.frontend_tokens
+        cache["cross"] = []
+        for g in layer_groups(cfg):
+            gdict = {}
+            for j, entry in enumerate(g.entries):
+                if entry[0] == "a":
+                    gdict[f"e{j}"] = {
+                        "ck": jax.ShapeDtypeStruct(
+                            (b, senc, cfg.n_heads, cfg.hd), jnp.bfloat16),
+                        "cv": jax.ShapeDtypeStruct(
+                            (b, senc, cfg.n_heads, cfg.hd), jnp.bfloat16)}
+            cache["cross"].append(stack(gdict, g.repeats))
+    if packed:
+        cache["book_exp_of_rank"] = book[0]
+        cache["book_rank_of_exp"] = book[1]
+    return cache
+
+
+def init_cache(cfg: ModelConfig, cass: CassandraConfig | None,
+               b: int, s_max: int, packed: bool,
+               codebook: tuple[jax.Array, jax.Array] | None = None) -> dict:
+    """Allocate a zeroed cache (smoke/bench scale only)."""
+    specs = cache_specs(cfg, cass, b, s_max, packed)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+    if packed:
+        book = codebook or default_kv_codebook()
+        # pad exp_of_rank to 256 so specs stay shape-stable
+        eor = jnp.zeros(256, jnp.uint8).at[:book[0].shape[0]].set(book[0])
+        cache["book_exp_of_rank"] = eor
+        cache["book_rank_of_exp"] = book[1]
+    return cache

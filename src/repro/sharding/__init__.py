@@ -1,0 +1,10 @@
+"""Sharding: logical-axis rules -> NamedSharding for params/opt/cache."""
+from repro.sharding.rules import (  # noqa: F401
+    param_shardings,
+    opt_shardings,
+    cache_shardings,
+    scratch_shardings,
+    batch_shardings,
+    act_shard_fn,
+    dp_axes,
+)

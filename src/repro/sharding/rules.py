@@ -1,0 +1,280 @@
+"""Logical-axis sharding rules (DESIGN.md §4).
+
+Every parameter path maps to a logical 2D layout ``(in_ax, out_ax)`` with
+axes drawn from {``fsdp`` → mesh "data", ``tp`` → mesh "model", None}:
+
+* TP shards attention heads / FFN hidden / vocab over ``model``.
+* FSDP (ZeRO-3) additionally shards the other big axis over ``data``; XLA
+  inserts the per-layer all-gathers.
+* EP shards the MoE expert dim over ``model``; expert in-features go over
+  ``data``.
+* Cassandra-packed leaves inherit the owning weight's layout: the leading
+  packed dim is the weight's *out* axis, the superblock (NB) dim is the
+  *in* (reduction) axis.
+* KV-cache stores shard batch over ``data`` (+``pod``) and the token axis
+  over ``model`` — sequence-parallel decode attention; XLA partitions the
+  softmax reductions with small all-reduces (MagicDec-style).
+
+The optimizer's int8 moments are shape-preserving (see training.optim), so
+``m.q`` / ``v.q`` reuse the parameter's spec verbatim.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel mesh axes (includes 'pod' when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# (path regex, (in_ax, out_ax)) — first match wins. Paths use '.'-joined
+# dict keys with list indices stripped, e.g. "dec.e0.attn.wq.w".
+_RULES: list[tuple[str, tuple]] = [
+    (r"\.experts\.",                     ("expert",)),       # special-cased
+    (r"(attn|xattn)\.(wq|wk|wv)\.",      ("fsdp", "tp")),
+    (r"(attn|xattn)\.wo\.",              ("tp", "fsdp")),
+    (r"\.q_a\.",                         ("fsdp", None)),
+    (r"\.q_b\.",                         ("fsdp", "tp")),
+    (r"\.kv_a\.",                        ("fsdp", None)),
+    (r"\.kv_b\.",                        ("fsdp", "tp")),
+    (r"(ffn|shared|moe\.shared)\.(w_gate|w_up)\.", ("fsdp", "tp")),
+    (r"(ffn|shared|moe\.shared)\.w_down\.", ("tp", "fsdp")),
+    (r"ssm\.in_proj\.",                  ("fsdp", "tp")),
+    (r"ssm\.out_proj\.",                 ("tp", "fsdp")),
+    (r"ssm\.x_proj\.",                   ("tp", None)),
+    (r"ssm\.dt_proj\.",                  (None, "tp")),
+    (r"embed\.table",                    ("tp", "fsdp")),
+    (r"pos_embed\.table",                ("fsdp", None)),
+    (r"lm_head\.",                       ("fsdp", "tp")),
+    (r"mtp\.proj\.",                     ("fsdp", "tp")),
+    (r"router\.",                        (None, None)),
+]
+
+# per-leaf base ndims of packed weights (without stacking prefixes)
+_PACKED_NDIM = {
+    "bitmap": 3, "signmant": 3, "exp_words": 3, "exp_mode": 2,
+    "exp_emax": 2, "exp_corr": 3, "mant_lo": 3, "shared_exp": 3,
+    "pruned_signmant": 3, "pruned_exp_words": 3, "pruned_exp_mode": 2,
+    "pruned_exp_emax": 2, "pruned_exp_corr": 3, "pruned_raw": 3,
+    "codebook": 1, "pruned_codebook": 1,
+}
+
+_SSM_1D = {"conv_b", "dt_bias", "D"}
+
+
+def _axis(mesh: Mesh, ax):
+    if ax == "fsdp":
+        return "data" if "data" in mesh.axis_names else None
+    if ax == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    return None
+
+
+def _match(path: str):
+    for pat, layout in _RULES:
+        if re.search(pat, path):
+            return layout
+    return None
+
+
+def _clean_path(kp) -> str:
+    parts = []
+    for k in kp:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        # drop SequenceKey indices: group lists
+    return ".".join(parts)
+
+
+def _weight_spec(mesh: Mesh, path: str, leaf, layout) -> P:
+    """Spec for one (possibly packed) weight leaf under a matched rule."""
+    ndim = leaf.ndim
+    is_expert = layout == ("expert",)
+    m = re.search(r"\.(spec|verif)\.([a-z_]+)$", path)
+    if m:                                   # packed leaf
+        name = m.group(2)
+        base = _PACKED_NDIM.get(name)
+        if base is None or name.endswith("codebook"):
+            return P()
+        lead = ndim - base
+        if is_expert:
+            # (R, E, out, NB, …): E over model, NB over data
+            spec = [None] * (lead - 1) + [_axis(mesh, "tp")]
+            spec += [None, _axis(mesh, "fsdp")][:base]
+        else:
+            in_ax, out_ax = layout
+            spec = [None] * lead
+            spec += [_axis(mesh, out_ax), _axis(mesh, in_ax)][:base]
+        spec += [None] * (ndim - len(spec))
+        return P(*spec)
+    # plain leaf
+    if path.endswith(".b"):                 # bias (…, out)
+        if is_expert:
+            return P(*([None] * (ndim - 1) + [None]))
+        return P(*([None] * (ndim - 1) + [_axis(mesh, layout[1])]))
+    if is_expert:
+        # (R, E, in, out) — E over model, in over data
+        spec = [None] * (ndim - 3) + [_axis(mesh, "tp"),
+                                      _axis(mesh, "fsdp"), None]
+        return P(*spec)
+    in_ax, out_ax = layout
+    return P(*([None] * (ndim - 2)
+               + [_axis(mesh, in_ax), _axis(mesh, out_ax)]))
+
+
+def _ssm_aux_spec(mesh: Mesh, path: str, leaf) -> P | None:
+    tp = _axis(mesh, "tp")
+    name = path.rsplit(".", 1)[-1]
+    if name in _SSM_1D:
+        return P(*([None] * (leaf.ndim - 1) + [tp]))
+    if name == "conv_w":                    # (R?, dc, di)
+        return P(*([None] * (leaf.ndim - 1) + [tp]))
+    if name == "A_log":                     # (R?, di, n)
+        return P(*([None] * (leaf.ndim - 2) + [tp, None]))
+    return None
+
+
+def param_spec_for(mesh: Mesh, path: str, leaf) -> P:
+    if "ssm" in path:
+        aux = _ssm_aux_spec(mesh, path, leaf)
+        if aux is not None:
+            return aux
+    layout = _match(path)
+    if layout is None:
+        return P()                          # replicate (norms, small leaves)
+    return _weight_spec(mesh, path, leaf, layout)
+
+
+def _fit_spec(mesh: Mesh, spec: P, leaf) -> P:
+    """Drop spec axes whose size does not divide the dim (replicate)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= sizes[a]
+        out.append(ax if leaf.shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def _drop_fsdp(spec: P) -> P:
+    """Serving profile: TP-only weights (replicated over data).
+
+    Decode re-reads every weight each draft step; FSDP sharding would
+    re-all-gather them γ+1 times per cycle. When the TP-sharded residents
+    fit HBM, replicating over `data` trades memory for zero weight
+    collectives on the decode path (§Perf hillclimb #1).
+    """
+    return P(*[None if ax == "data" else ax for ax in spec])
+
+
+def param_shardings(mesh: Mesh, params_struct, serving: bool = False):
+    """NamedSharding pytree matching a (possibly packed) params struct."""
+    def spec(kp, leaf):
+        s = param_spec_for(mesh, _clean_path(kp), leaf)
+        if serving:
+            s = _drop_fsdp(s)
+        return NamedSharding(mesh, _fit_spec(mesh, s, leaf))
+    return jax.tree_util.tree_map_with_path(spec, params_struct)
+
+
+def opt_shardings(mesh: Mesh, opt_struct):
+    """Moments mirror their parameter's layout; int8 `q` preserves shape."""
+    def spec(kp, leaf):
+        path = _clean_path(kp)
+        # strip the m./v. prefix and the trailing .q/.scale of int8 states
+        inner = re.sub(r"^(m|v)\.", "", path)
+        inner = re.sub(r"\.(q|scale)$", "", inner)
+        if path == "step":
+            return NamedSharding(mesh, P())
+        base = param_spec_for(mesh, inner, leaf)
+        if path.endswith(".scale") and len(base) == leaf.ndim:
+            base = P(*(list(base)[:-1] + [None]))   # block dim replicated
+        if len(base) > leaf.ndim:
+            base = P(*list(base)[:leaf.ndim])
+        return NamedSharding(mesh, _fit_spec(mesh, base, leaf))
+    return jax.tree_util.tree_map_with_path(spec, opt_struct)
+
+
+# ---------------------------------------------------------------------------
+# Cache / batch / activations
+# ---------------------------------------------------------------------------
+
+def cache_shardings(mesh: Mesh, cache_struct, seq_shard: bool = True):
+    """KV stores: batch over data(+pod); token axis over model (SP)."""
+    dp = dp_axes(mesh)
+    tp = "model" if seq_shard and "model" in mesh.axis_names else None
+
+    def spec(kp, leaf):
+        path = _clean_path(kp)
+        name = path.rsplit(".", 1)[-1]
+        if path == "length":
+            return NamedSharding(mesh, _fit_spec(mesh, P(dp), leaf))
+        if "book" in path or name.endswith("codebook"):
+            return NamedSharding(mesh, P())
+        if name in ("conv", "h"):           # ssm state (R,B,…)
+            if name == "conv":              # (R,B,dc-1,di)
+                s = P(None, dp, None, "model")
+            else:
+                s = P(None, dp, "model", None)
+        elif name in ("ck", "cv"):          # (R,B,Senc,H,hd)
+            s = P(None, dp, None, "model", None)
+        else:
+            # kv store leaf (R,B,S,…): shard S over model
+            s = P(*([None, dp, tp] + [None] * (leaf.ndim - 3))[:leaf.ndim])
+        return NamedSharding(mesh, _fit_spec(mesh, s, leaf))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_struct)
+
+
+def scratch_shardings(mesh: Mesh, scratch_struct):
+    dp = dp_axes(mesh)
+
+    def spec(kp, leaf):
+        name = _clean_path(kp).rsplit(".", 1)[-1]
+        if name == "conv":
+            s = P(None, dp, None, "model")
+        elif name == "h":
+            s = P(None, dp, "model", None)
+        else:
+            s = P(*([None, dp] + [None] * (leaf.ndim - 2)))
+        return NamedSharding(mesh, _fit_spec(mesh, s, leaf))
+
+    return jax.tree_util.tree_map_with_path(spec, scratch_struct)
+
+
+def batch_shardings(mesh: Mesh, batch_struct):
+    dp = dp_axes(mesh)
+
+    def spec(_, leaf):
+        s = P(*([dp] + [None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, _fit_spec(mesh, s, leaf))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_struct)
+
+
+def act_shard_fn(mesh: Mesh):
+    """Runtime.shard hook: logical activation names -> constraints."""
+    dp = dp_axes(mesh)
+    amap = {"batch": dp, "heads": "model", "kv_heads": "model",
+            "ffn": "model", "experts": "model", "seq_kv": "model"}
+
+    def shard(x, logical):
+        if len(logical) != getattr(x, "ndim", -1):
+            return x       # e.g. inside vmap (expert FFN) — rank differs
+        spec = P(*[amap.get(a) if isinstance(a, str) else None
+                   for a in logical])
+        spec = _fit_spec(mesh, spec, x)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard

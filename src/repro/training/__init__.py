@@ -1,0 +1,7 @@
+"""Training substrate: AdamW (fp32 / 8-bit states), train_step, grad accum."""
+from repro.training.optim import (  # noqa: F401
+    OptConfig,
+    init_opt_state,
+    apply_updates,
+)
+from repro.training.trainer import train_step, TrainConfig  # noqa: F401

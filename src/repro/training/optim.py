@@ -1,0 +1,135 @@
+"""AdamW with fp32 or block-quantized int8 moments.
+
+8-bit moments are the distributed-optimization trick that keeps the 671B
+config inside v5e HBM (DESIGN.md §7): m and v are stored as int8 with one
+fp32 scale per 256-value block; dequant→update→requant each step. The
+quantization error feeds back through the stored state (the next step's
+dequant sees it), which empirically matches fp32 Adam closely at LLM scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+QBLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "fp32"       # fp32 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization
+# ---------------------------------------------------------------------------
+
+def _q8(x: jax.Array) -> dict:
+    """Blockwise int8 quantization along the LAST axis, shape-preserving.
+
+    ``q`` keeps the parameter's own shape (padded last dim) so it inherits
+    the parameter's sharding spec verbatim; ``scale`` is fp32 per 256-value
+    block of the last axis.
+    """
+    n = x.shape[-1]
+    pad = (-n) % QBLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = x.reshape(*x.shape[:-1], -1, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "scale": scale[..., 0]}
+
+
+def _dq8(s: dict, shape) -> jax.Array:
+    q = s["q"].reshape(*s["q"].shape[:-1], -1, QBLOCK)
+    x = (q.astype(jnp.float32) * s["scale"][..., None]).reshape(
+        s["q"].shape)
+    return x[..., :shape[-1]].reshape(shape)
+
+
+def _moment_init(p: jax.Array, dtype: str):
+    z = jnp.zeros(p.shape, jnp.float32)
+    return _q8(z) if dtype == "int8" else z
+
+
+def _moment_read(s, shape, dtype: str):
+    return _dq8(s, shape) if dtype == "int8" else s
+
+
+def _moment_write(x: jax.Array, dtype: str):
+    return _q8(x) if dtype == "int8" else x
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params: PyTree, cfg: OptConfig) -> dict:
+    return {
+        "step": jnp.int32(0),
+        "m": jax.tree.map(lambda p: _moment_init(p, cfg.state_dtype), params),
+        "v": jax.tree.map(lambda p: _moment_init(p, cfg.state_dtype), params),
+    }
+
+
+def lr_schedule(cfg: OptConfig, step) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(params: PyTree, grads: PyTree, opt_state: dict,
+                  cfg: OptConfig) -> tuple[PyTree, dict, dict]:
+    """One AdamW step; params stay in their storage dtype (bf16)."""
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = lr_schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_s, v_s in zip(flat_p, flat_g, flat_m, flat_v):
+        g = g.astype(jnp.float32) * clip
+        m = _moment_read(m_s, p.shape, cfg.state_dtype)
+        v = _moment_read(v_s, p.shape, cfg.state_dtype)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if p.ndim >= 2:                        # decoupled decay on matrices
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(_moment_write(m, cfg.state_dtype))
+        new_v.append(_moment_write(v, cfg.state_dtype))
+
+    return (jax.tree.unflatten(treedef, new_p),
+            {"step": step,
+             "m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v)},
+            {"grad_norm": gn, "lr": lr})

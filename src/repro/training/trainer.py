@@ -1,0 +1,71 @@
+"""train_step: loss + grad (+ accumulation) + AdamW, fully under jit.
+
+Gradient compression (int8 error-feedback all-reduce) hooks in through
+``sharding.collectives.compress_grads`` when enabled — see DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.layers import Runtime
+from repro.training import optim as O
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: O.OptConfig = O.OptConfig()
+    accum_steps: int = 1
+    z_loss: float = 1e-4
+    balance_coef: float = 1e-2
+    grad_compress: bool = False     # int8 error-feedback gradient exchange
+
+
+def _loss(rt: Runtime, params, batch, tcfg: TrainConfig):
+    return M.loss_fn(rt, params, batch, z_loss=tcfg.z_loss,
+                     balance_coef=tcfg.balance_coef)
+
+
+def grads_fn(rt: Runtime, params, batch, tcfg: TrainConfig):
+    """(grads, metrics) with optional microbatch accumulation."""
+    gfn = jax.value_and_grad(lambda p, b: _loss(rt, p, b, tcfg),
+                             has_aux=True)
+    if tcfg.accum_steps <= 1:
+        (_, metrics), grads = gfn(params, batch)
+        return grads, metrics
+
+    n = tcfg.accum_steps
+    micro = jax.tree.map(
+        lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+    def step(carry, mb):
+        acc, _ = carry
+        (_, metrics), g = gfn(params, mb)
+        acc = jax.tree.map(lambda a, b: a + b, acc, g)
+        return (acc, metrics), None
+
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    m0 = jax.eval_shape(lambda b: gfn(params, b)[0][1],
+                        jax.tree.map(lambda x: x[0], micro))
+    m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+    (grads, metrics), _ = jax.lax.scan(step, (zero, m0), micro)
+    grads = jax.tree.map(lambda g: g / n, grads)
+    return grads, metrics
+
+
+def train_step(rt: Runtime, params, opt_state, batch,
+               tcfg: TrainConfig = TrainConfig()):
+    """One optimizer step. Jit with donate_argnums=(1, 2)."""
+    grads, metrics = grads_fn(rt, params, batch, tcfg)
+    if tcfg.grad_compress:
+        from repro.sharding import collectives as C
+        grads, err = C.compress_grads(grads)
+        metrics = dict(metrics)
+        metrics["compress_err"] = err
+    params, opt_state, opt_metrics = O.apply_updates(
+        params, grads, opt_state, tcfg.opt)
+    metrics = {**metrics, **opt_metrics}
+    return params, opt_state, metrics

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitops, coding, mx
+from repro.core.format import CassandraConfig, format_weight
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_bf16(key, shape, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(jnp.bfloat16)
+
+
+class TestDraftMatmul:
+    @pytest.mark.parametrize("shape,m", [((512, 128), 16), ((1024, 256), 8),
+                                         ((512, 96), 4)])
+    def test_vs_rank3_oracle_exact(self, shape, m):
+        """Kernel == rank3 oracle bit-exactly (same decode semantics)."""
+        key = jax.random.PRNGKey(0)
+        w = rand_bf16(key, shape)
+        cass = CassandraConfig(variant=1)
+        spec, _ = format_weight(w, None, cass)
+        x = rand_bf16(jax.random.PRNGKey(1), (m, shape[0]))
+        y_kernel = ops.draft_matmul(x, spec, cass, shape, interpret=True)
+        y_oracle = ops.draft_matmul_rank3_oracle(x, spec, cass, shape)
+        np.testing.assert_allclose(np.asarray(y_kernel, np.float32),
+                                   np.asarray(y_oracle, np.float32),
+                                   rtol=2e-2, atol=1e-3)
+
+    def test_vs_full_c1_draft_close(self):
+        """rank3 escape (rank>=7 -> emax) deviates on <2% of values and the
+        matmul output stays close to the true C-1 draft."""
+        key = jax.random.PRNGKey(2)
+        shape = (1024, 128)
+        w = rand_bf16(key, shape)
+        cass = CassandraConfig(variant=1)
+        spec, _ = format_weight(w, None, cass)
+        wk = np.asarray(ops.draft_weight_dense(spec, cass, shape,
+                                               interpret=True), np.float32)
+        wr = np.asarray(ref.draft_weight_ref(spec, cass, shape), np.float32)
+        frac_diff = (wk != wr).mean()
+        assert frac_diff < 0.02, frac_diff
+        # same sparsity pattern
+        assert ((wk == 0) == (wr == 0)).all()
+
+    @pytest.mark.parametrize("trunc", [0, 2, 4])
+    def test_trunc_sweep(self, trunc):
+        shape = (512, 128)
+        w = rand_bf16(jax.random.PRNGKey(3), shape)
+        cass = CassandraConfig(variant=1, weight_trunc=trunc)
+        spec, _ = format_weight(w, None, cass)
+        x = rand_bf16(jax.random.PRNGKey(4), (4, shape[0]))
+        y_kernel = ops.draft_matmul(x, spec, cass, shape, interpret=True)
+        y_oracle = ops.draft_matmul_rank3_oracle(x, spec, cass, shape)
+        np.testing.assert_allclose(np.asarray(y_kernel, np.float32),
+                                   np.asarray(y_oracle, np.float32),
+                                   rtol=2e-2, atol=1e-3)
+
+
+class TestUnaryDecode:
+    @pytest.mark.parametrize("k,nb", [(64, 8), (320, 4), (96, 16)])
+    def test_vs_ref(self, k, nb):
+        key = jax.random.PRNGKey(5)
+        ranks = jnp.minimum(jax.random.geometric(key, 0.55, (nb, k)) - 1, 12
+                            ).astype(jnp.uint8)
+        n_bits = coding.region_words(k, 3) * 32
+        bits, ok = coding.unary_encode_block(ranks, n_bits)
+        assert bool(jnp.all(ok))
+        words = bitops.pack_bits(bits)
+        out = ops.unary_decode(words, k, interpret=True)
+        expect = ref.unary_decode_ref(words, k)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(expect, np.int32))
+
+
+class TestMXDecode:
+    @pytest.mark.parametrize("shape,group", [((8, 64), 32), ((16, 128), 16),
+                                             ((4, 256), 32)])
+    def test_vs_ref(self, shape, group):
+        x = rand_bf16(jax.random.PRNGKey(6), shape, scale=3.0)
+        enc = mx.mx_encode(x, group=group)
+        out = ops.mx_decode(enc["sign"], enc["m16"], enc["shared_exp"],
+                            group=group, interpret=True)
+        expect = ref.mx_decode_ref(enc["sign"], enc["m16"],
+                                   enc["shared_exp"], group=group)
+        np.testing.assert_array_equal(
+            np.asarray(bitops.bf16_to_bits(out)),
+            np.asarray(bitops.bf16_to_bits(expect)))
+
+
+class TestKVTopK:
+    @pytest.mark.parametrize("r,d,keep", [(32, 128, 80), (16, 64, 32),
+                                          (64, 128, 48)])
+    def test_vs_ref(self, r, d, keep):
+        v = rand_bf16(jax.random.PRNGKey(7), (r, d))
+        out = ops.kv_topk(v, keep, interpret=True)
+        expect = ref.kv_topk_ref(v, keep)
+        np.testing.assert_array_equal(np.asarray(out["bitmap"]),
+                                      np.asarray(expect["bitmap"]))
+        np.testing.assert_array_equal(
+            np.asarray(out["kept"], np.float32),
+            np.asarray(expect["kept"], np.float32))

@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) for the bit-level invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, coding, mx, pruning
+from repro.core.format import CassandraConfig, format_weight, target_weight
+from repro.core import speculative as SP
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(st.integers(0, 2**16 - 1), st.integers(0, 7))
+@settings(**SETTINGS)
+def test_truncate_merge_identity(bits16, keep):
+    x = bitops.bits_to_bf16(jnp.array([bits16], jnp.uint16))
+    t, lo = bitops.truncate_mantissa(x, keep)
+    y = bitops.merge_mantissa(t, lo, keep)
+    assert int(bitops.bf16_to_bits(y)[0]) == bits16
+
+
+@given(st.lists(st.integers(0, 2**12 - 1), min_size=8, max_size=8),
+       st.integers(1, 12))
+@settings(**SETTINGS)
+def test_pack_codes_roundtrip(vals, width):
+    codes = jnp.array([v % (2 ** width) for v in vals], jnp.uint32)[None]
+    words = bitops.pack_codes(codes, width)
+    out = bitops.unpack_codes(words, width, 8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+@given(st.lists(st.integers(0, 15), min_size=4, max_size=32))
+@settings(**SETTINGS)
+def test_unary_roundtrip_property(ranks):
+    k = len(ranks)
+    r = jnp.array(ranks, jnp.uint8)[None]
+    n_bits = max(coding.region_words(k, 3) * 32, int(r.sum()) + k + 32)
+    n_bits = ((n_bits + 31) // 32) * 32
+    bits, ok = coding.unary_encode_block(r, n_bits)
+    if bool(ok[0]):
+        out = coding.unary_decode_block(bits, k)
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.asarray(r[0]))
+
+
+@given(st.integers(0, 255), st.integers(0, 255))
+@settings(**SETTINGS)
+def test_delta_corr8_always_exact(e1, e2):
+    exps = jnp.array([[e1, e2]], jnp.uint8)
+    emax = jnp.max(exps, -1)
+    code, corr = coding.delta_encode_block(exps, emax, 3, corr_bits=8)
+    out = coding.delta_decode_block(code, emax, 3, corr=corr, corr_bits=8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exps))
+
+
+@given(st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_c1_weight_bitexact_random_seed(seed):
+    key = jax.random.PRNGKey(seed)
+    w = (jax.random.normal(key, (64, 32))
+         * 10 ** jax.random.uniform(jax.random.fold_in(key, 1), (),
+                                    minval=-3, maxval=3)
+         ).astype(jnp.bfloat16)
+    cfg = CassandraConfig(variant=1)
+    spec, verif = format_weight(w, None, cfg)
+    back = target_weight(spec, verif, cfg, (64, 32))
+    np.testing.assert_array_equal(
+        np.asarray(bitops.bf16_to_bits(w)),
+        np.asarray(bitops.bf16_to_bits(back)))
+
+
+@given(st.integers(1, 64), st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_topk_select_invariants(keep_raw, seed):
+    keep = max(16, (keep_raw // 16) * 16)
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (1, 64)).astype(jnp.bfloat16)
+    keep = min(keep, 64)
+    sel = pruning.select_topk_blocked(v, jnp.abs(v.astype(jnp.float32)),
+                                      keep, 64)
+    mask = np.asarray(bitops.unpack_bits(sel["bitmap"], 64))[0, 0]
+    assert mask.sum() == keep
+    kept_abs = np.abs(np.asarray(v, np.float32))[0][mask]
+    pruned_abs = np.abs(np.asarray(v, np.float32))[0][~mask]
+    if len(pruned_abs) and len(kept_abs):
+        assert kept_abs.min() >= pruned_abs.max() - 1e-6
+
+
+@given(st.lists(st.integers(0, 7), min_size=3, max_size=3),
+       st.lists(st.integers(0, 7), min_size=4, max_size=4))
+@settings(**SETTINGS)
+def test_greedy_accept_is_longest_prefix(draft, target):
+    v = 8
+    d = jnp.array(draft, jnp.int32)[None]
+    tl = jnp.full((1, 4, v), -5.0)
+    for i, t in enumerate(target):
+        tl = tl.at[0, i, t].set(5.0)
+    res = SP.greedy_accept(d, tl)
+    expect = 0
+    for a, b in zip(draft, target):
+        if a == b:
+            expect += 1
+        else:
+            break
+    assert int(res.n_accepted[0]) == expect
+    assert int(res.next_token[0]) == target[expect]
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_mx_decode_monotone_zero(seed):
+    x = (jax.random.normal(jax.random.PRNGKey(seed), (1, 32)) * 1e-3
+         ).astype(jnp.bfloat16)
+    enc = mx.mx_encode(x, group=32)
+    dec = mx.mx_decode(enc, group=32)
+    # decode never flips sign and never exceeds the original magnitude x2
+    a = np.asarray(x, np.float32)
+    b = np.asarray(dec, np.float32)
+    assert np.all((a == 0) | (np.sign(a) == np.sign(b)) | (b == 0))

@@ -1,0 +1,45 @@
+"""Fault tolerance: straggler watchdog policy + failure-injected training."""
+import jax
+
+from repro.launch.train import StragglerWatchdog, run
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestWatchdog:
+    def test_steady_state_ok(self):
+        w = StragglerWatchdog()
+        assert all(w.observe(0.1) == "ok" for _ in range(20))
+
+    def test_single_blip_tolerated(self):
+        w = StragglerWatchdog(patience=3)
+        for _ in range(5):
+            w.observe(0.1)
+        assert w.observe(0.5) == "slow"
+        assert w.observe(0.1) == "ok"        # strike reset
+
+    def test_persistent_straggler_flagged(self):
+        w = StragglerWatchdog(patience=3, alpha=0.01)
+        for _ in range(5):
+            w.observe(0.1)
+        verdicts = [w.observe(0.6) for _ in range(3)]
+        assert verdicts[-1] == "straggler"
+
+    def test_gradual_slowdown_adapts(self):
+        """EWMA tracks a slow drift without false straggler alarms."""
+        w = StragglerWatchdog(patience=3, alpha=0.3)
+        t = 0.1
+        verdicts = []
+        for _ in range(30):
+            t *= 1.05
+            verdicts.append(w.observe(t))
+        assert "straggler" not in verdicts
+
+
+def test_train_survives_injected_failure(tmp_path):
+    """Driver restores from checkpoint after a mid-run failure."""
+    run(["--arch", "llama3-8b", "--smoke", "--steps", "12",
+         "--batch", "2", "--seq", "32", "--ckpt-every", "4",
+         "--fail-at-step", "6", "--ckpt-dir", str(tmp_path)])
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 12

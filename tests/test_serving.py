@@ -1,0 +1,105 @@
+"""Speculative engine: losslessness, identity-draft acceptance, rejection
+sampling distribution guarantee."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import speculative as SP
+from repro.core.format import CassandraConfig
+from repro.core.packing import format_params
+from repro.models import init_params
+from repro.serving.engine import Engine, EngineConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _gen(cfg, params, cass, max_new=10, speculative=True, gamma=3):
+    eng = Engine(cfg, params, cass=cass, ecfg=EngineConfig(gamma=gamma),
+                 rt_extra={"ssm_chunk": 8})
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 16),
+                                           0, cfg.vocab_size)}
+    toks, stats = eng.generate(prompt, max_new=max_new,
+                               speculative=speculative)
+    row = np.asarray(toks[0])
+    return row[row >= 0], stats
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "jamba-v0.1-52b"])
+def test_lossless_vs_autoregressive(arch):
+    """Headline: Cassandra-1 speculative output == bf16 greedy output."""
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    base, _ = _gen(cfg, params, None, speculative=False)
+    cass = CassandraConfig(variant=1, gamma=3)
+    spec, _ = _gen(cfg, format_params(params, cass), cass)
+    n = min(len(base), len(spec), 10)
+    np.testing.assert_array_equal(base[:n], spec[:n])
+
+
+def test_identity_draft_full_acceptance():
+    """No compression -> draft == target -> acceptance exactly 1.0."""
+    cfg = get_config("llama3-8b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cass = CassandraConfig(variant=1, gamma=3, weight_prune=0.0,
+                           kv_prune=0.0, weight_trunc=0, kv_trunc=0)
+    _, stats = _gen(cfg, format_params(params, cass), cass)
+    assert stats["acceptance"] == 1.0
+
+
+def test_greedy_accept_prefix_rule():
+    draft = jnp.array([[5, 6, 7], [5, 9, 7]], jnp.int32)
+    v = 16
+    tl = jnp.full((2, 4, v), -10.0)
+    # target argmax: row0 = 5,6,7,8 (all match + bonus), row1 = 5,6,...
+    for b, seq in enumerate(((5, 6, 7, 8), (5, 6, 7, 8))):
+        for i, t in enumerate(seq):
+            tl = tl.at[b, i, t].set(10.0)
+    res = SP.greedy_accept(draft, tl)
+    assert res.n_accepted.tolist() == [3, 1]
+    assert res.next_token.tolist() == [8, 6]
+    assert res.tokens[0].tolist() == [5, 6, 7, 8]
+    assert res.valid[1].tolist() == [True, True, False, False]
+
+
+def test_rejection_sampling_preserves_distribution():
+    """Empirical check of the Eq. 1 guarantee on a 3-token toy problem."""
+    v = 3
+    p = jnp.array([0.6, 0.3, 0.1])          # target
+    q = jnp.array([0.2, 0.5, 0.3])          # draft
+    n, gamma = 4000, 1
+    key = jax.random.PRNGKey(42)
+    k1, k2 = jax.random.split(key)
+    draft_tokens = jax.random.categorical(
+        k1, jnp.log(q)[None, None, :].repeat(n, 0)[:, 0])[:, None]
+    res = SP.rejection_sample(
+        draft_tokens.astype(jnp.int32),
+        jnp.broadcast_to(q, (n, gamma, v)),
+        jnp.broadcast_to(p, (n, gamma + 1, v)), k2)
+    first = np.asarray(res.tokens[:, 0])
+    freq = np.bincount(first, minlength=v) / n
+    np.testing.assert_allclose(freq, np.asarray(p), atol=0.03)
+
+
+def test_commit_rollback_lengths():
+    """Per-row acceptance advances per-row cache lengths correctly."""
+    cfg = get_config("llama3-8b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cass = CassandraConfig(variant=1, gamma=2)
+    packed = format_params(params, cass)
+    eng = Engine(cfg, packed, cass=cass, ecfg=EngineConfig(gamma=2),
+                 rt_extra={"ssm_chunk": 8})
+    from repro.serving import kvcache as KC
+    from repro.models import forward_prefill
+    b = 3
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (b, 8),
+                                           0, cfg.vocab_size)}
+    cache = KC.init_cache(cfg, cass, b, 8 + 16, packed=True)
+    logits, cache = eng._prefill(packed, prompt, cache)
+    assert cache["length"].tolist() == [8, 8, 8]
+    cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    res, cache = eng._spec(packed, cache, cur, jax.random.PRNGKey(3))
+    expect = (8 + np.asarray(res.n_accepted) + 1).tolist()
+    assert cache["length"].tolist() == expect
