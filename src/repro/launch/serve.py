@@ -5,6 +5,14 @@
 
 ``--variant 0`` runs the bf16 autoregressive baseline. Reports tokens,
 cycles, acceptance rate and the bandwidth-model speedup estimate.
+
+``--scheduler`` serves the same requests through the continuous-batching
+scheduler instead of the fixed-batch engine: requests are admitted into
+``--slots`` cache rows, finish independently, and free slots are recycled
+by the queue:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --variant 1 --scheduler --slots 2 --requests 6 --max-new 32
 """
 from __future__ import annotations
 
@@ -21,6 +29,7 @@ from repro.core.speculative import speedup_model
 from repro.models import init_params, forward_train
 from repro.models.layers import Runtime
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import Scheduler
 
 
 def run(argv=None):
@@ -36,6 +45,9 @@ def run(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--calibrate", action="store_true",
                     help="Wanda calibration pass before formatting")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="continuous batching through --slots cache rows")
+    ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -70,9 +82,31 @@ def run(argv=None):
               f"verif={nb['verif']/1e6:.1f}MB plain={nb['plain']/1e6:.1f}MB "
               f"(draft reads {nb['spec']/max(total,1)*100:.0f}% of resident)")
 
-    eng = Engine(cfg, params, cass=cass,
-                 ecfg=EngineConfig(gamma=args.gamma, greedy=args.greedy),
-                 rt_extra={"ssm_chunk": 8 if args.smoke else 64})
+    ecfg = EngineConfig(gamma=args.gamma, greedy=args.greedy)
+    rt_extra = {"ssm_chunk": 8 if args.smoke else 64}
+
+    if args.scheduler:
+        s_max = args.prompt_len + args.max_new + args.gamma + 1
+        sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
+                          num_slots=args.slots, s_max=s_max,
+                          speculative=args.variant != 0, rt_extra=rt_extra)
+        t0 = time.time()
+        for i in range(args.requests):
+            sched.submit(prompt["tokens"][i % b], max_new=args.max_new)
+        done = sched.run()
+        dt = time.time() - t0
+        s = sched.summary()
+        print(f"[sched] {len(done)} reqs through {args.slots} slots, "
+              f"cycles={s['cycles']}, tokens/cycle={s['tokens_per_cycle']:.2f}, "
+              f"acceptance={s['acceptance']}, "
+              f"mean latency={s.get('mean_latency_cycles', 0):.1f} cycles, "
+              f"wall={dt:.1f}s")
+        for r in sorted(done, key=lambda r: r.rid):
+            print(f"  req {r.rid}: {len(r.output)} tokens, "
+                  f"first {r.output[:8]}")
+        return
+
+    eng = Engine(cfg, params, cass=cass, ecfg=ecfg, rt_extra=rt_extra)
     t0 = time.time()
     tokens, stats = eng.generate(prompt, max_new=args.max_new,
                                  key=jax.random.fold_in(key, 2),

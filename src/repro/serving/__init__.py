@@ -1,5 +1,7 @@
-"""Serving: KV cache (Cassandra-packed), prefill, decode, speculative engine.
+"""Serving: KV cache (Cassandra-packed), speculative engine, and the
+continuous-batching scheduler.
 
-Import submodules explicitly (``repro.serving.engine``, ``….kvcache``) —
-this package init stays empty to avoid model↔serving import cycles.
+Import submodules explicitly (``repro.serving.engine``, ``….kvcache``,
+``….scheduler``) — this package init stays empty to avoid model↔serving
+import cycles.
 """

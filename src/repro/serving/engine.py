@@ -219,6 +219,29 @@ def autoregressive_step(rt: Runtime, params, cache: dict,
 
 
 # ---------------------------------------------------------------------------
+# Device-side output harvest
+# ---------------------------------------------------------------------------
+
+def scatter_tokens(buf: jax.Array, count: jax.Array, tokens: jax.Array,
+                   valid: jax.Array, adv: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Scatter a cycle's accepted tokens into a (B, cap) output buffer.
+
+    Each row writes its ``valid`` tokens at its own offset ``count[b]``;
+    invalid slots are routed past ``cap`` where the scatter drops them, so
+    no host-side -1 bookkeeping is needed. ``adv`` is the per-row count
+    advance (n_accepted+1 for speculative cycles, 1 for autoregressive).
+    """
+    b, q = tokens.shape
+    cap = buf.shape[1]
+    pos = count[:, None] + jnp.arange(q)[None, :]
+    pos = jnp.where(valid, pos, cap)
+    buf = buf.at[jnp.arange(b)[:, None], pos].set(
+        tokens.astype(buf.dtype), mode="drop")
+    return buf, jnp.minimum(count + adv.astype(count.dtype), cap)
+
+
+# ---------------------------------------------------------------------------
 # Host-side generation loop (examples / tests / benches)
 # ---------------------------------------------------------------------------
 
@@ -238,10 +261,13 @@ class Engine:
                                      ecfg=self.ecfg), donate_argnums=(1,))
         self._auto = jax.jit(partial(autoregressive_step, self.rt),
                              donate_argnums=(1,))
+        self._scatter = jax.jit(scatter_tokens, donate_argnums=(0,))
 
     def generate(self, batch: dict, max_new: int, key=None,
                  speculative: bool = True):
-        """Returns (tokens (B,≥max_new), stats)."""
+        """Returns (tokens (B, max_new+γ+1) int32, -1 beyond each row's
+        output, every row holding ≥ max_new committed tokens), stats."""
+        import numpy as np
         key = key if key is not None else jax.random.PRNGKey(0)
         b, s = batch["tokens"].shape
         pad = self.ecfg.gamma + 1
@@ -252,31 +278,42 @@ class Engine:
                               packed=self.cass is not None)
         logits, cache = self._prefill(self.params, batch, cache)
         cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out_tokens = [cur[:, 0]]
-        import numpy as np
-        committed = np.ones(b)              # the prefill-argmax token
+        # device-side output buffer; rows past max_new spill into the γ+1
+        # slack and anything beyond is dropped by the scatter
+        buf = jnp.full((b, max_new + pad), -1, jnp.int32)
+        count = jnp.zeros((b,), jnp.int32)
+        ones_b = jnp.ones((b,), jnp.int32)
+        buf, count = self._scatter(buf, count, cur,
+                                   jnp.ones((b, 1), bool), ones_b)
+        committed = np.ones(b, np.int64)    # the prefill-argmax token
         cycles = accepted = drafted = 0
-        while committed.max() < max_new:
+        while committed.min() < max_new:
             key, sub = jax.random.split(key)
+            active = committed < max_new    # rows still owing tokens
             if speculative:
                 res, cache = self._spec(self.params, cache, cur, sub)
-                # harvest: accepted prefix + next token per row (-1 = pad)
-                for j in range(self.ecfg.gamma + 1):
-                    out_tokens.append(jnp.where(res.valid[:, j],
-                                                res.tokens[:, j], -1))
+                buf, count = self._scatter(buf, count, res.tokens,
+                                           res.valid, res.n_accepted + 1)
                 n = np.asarray(res.n_accepted)
                 committed += n + 1
-                accepted += int(n.sum())
-                drafted += self.ecfg.gamma * b
+                accepted += int(n[active].sum())
+                drafted += self.ecfg.gamma * int(active.sum())
                 cycles += 1
                 cur = res.next_token[:, None]
             else:
                 nxt, cache = self._auto(self.params, cache, cur, sub)
-                out_tokens.append(nxt)
+                buf, count = self._scatter(buf, count, nxt[:, None],
+                                           jnp.ones((b, 1), bool), ones_b)
                 committed += 1
                 cycles += 1
                 cur = nxt[:, None]
+        # delivered tokens (device count, capped at the buffer) — fast rows
+        # overshoot max_new while slow rows catch up, and those dropped
+        # tokens must not inflate throughput; prefill-argmax token is not a
+        # decode-cycle product either
+        delivered = np.asarray(count, np.int64)
         stats = {"cycles": cycles,
-                 "tokens_per_cycle": float(committed.mean()) / max(cycles, 1),
+                 "tokens_per_cycle": float(delivered.mean() - 1)
+                 / max(cycles, 1),
                  "acceptance": accepted / drafted if drafted else None}
-        return jnp.stack(out_tokens, axis=1), stats
+        return buf, stats

@@ -1,0 +1,281 @@
+"""Continuous-batching speculative serving scheduler.
+
+The paper's serving scenario (§VI) is memory-budgeted edge decode: many
+independent requests, low instantaneous batch, long reasoning outputs. The
+fixed-batch ``Engine.generate`` loop cannot admit or retire requests — the
+whole batch runs until the *slowest* row finishes. This scheduler
+multiplexes a request queue through the same jit'd ``spec_decode_step``:
+
+* **Slots** — a fixed (B, S_max) packed KV cache; each row is a slot. The
+  per-row ``length`` offsets already supported by ``commit`` /
+  ``forward_decode`` mean rows at different positions coexist in one step.
+* **Admission** — a queued request is prefilled into a fresh single-row
+  cache (one compile per prompt length) and the row is scattered into a
+  free slot with ``dynamic_update_slice`` (slot index is traced — no
+  recompile per slot).
+* **Decode** — one speculative cycle advances *all* occupied slots;
+  free/finished rows ride along with their cache length frozen so their
+  state is inert until recycled.
+* **Retirement** — per-row early exit on EOS or ``max_new``; the slot is
+  freed immediately and the next queued request reuses its cache region.
+
+γ=0 / ``speculative=False`` degrades to continuous-batching autoregressive
+decode — the serving baseline for ``benchmarks/throughput.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.format import CassandraConfig
+from repro.models import model as M
+from repro.models.layers import Runtime
+from repro.serving import kvcache as KC
+from repro.serving.engine import (EngineConfig, autoregressive_step,
+                                  spec_decode_step)
+
+QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request moving through the scheduler lifecycle."""
+    rid: int
+    tokens: np.ndarray                  # (L,) int prompt
+    max_new: int
+    arrival: float = 0.0                # scheduler-clock cycle of arrival
+    state: str = QUEUED
+    slot: int = -1
+    output: list = dataclasses.field(default_factory=list)
+    admitted_at: float = -1.0
+    finished_at: float = -1.0
+
+    @property
+    def done(self) -> bool:
+        return self.state == FINISHED
+
+
+def _install_row(cache: dict, row: dict, slot: jax.Array) -> dict:
+    """Scatter a prefilled single-row cache into batch index ``slot``.
+
+    ``slot`` is a traced int32 scalar, so one compile serves every slot —
+    the recycling path never triggers a retrace.
+    """
+    def put(c, n):
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), slot, axis=1)   # leaves are (R,B,…)
+
+    out = dict(cache)
+    out["dec"] = jax.tree.map(put, cache["dec"], row["dec"])
+    if "cross" in cache:
+        out["cross"] = jax.tree.map(put, cache["cross"], row["cross"])
+    out["length"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["length"], row["length"].astype(cache["length"].dtype),
+        slot, axis=0)
+    return out
+
+
+def _masked_spec(rt: Runtime, params, cache: dict, cur: jax.Array,
+                 key: jax.Array, active: jax.Array, ecfg: EngineConfig):
+    """One speculative cycle; inactive rows keep their cache length frozen
+    (their K/V writes land in the masked stale region and stay inert)."""
+    length0 = cache["length"]
+    res, cache = spec_decode_step(rt, params, cache, cur, key, ecfg)
+    cache["length"] = jnp.where(active, cache["length"], length0)
+    return res, cache
+
+
+def _masked_auto(rt: Runtime, params, cache: dict, cur: jax.Array,
+                 key: jax.Array, active: jax.Array):
+    length0 = cache["length"]
+    nxt, cache = autoregressive_step(rt, params, cache, cur, key)
+    cache["length"] = jnp.where(active, cache["length"], length0)
+    return nxt, cache
+
+
+class Scheduler:
+    """Continuous-batching front end over the speculative decode step."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 cass: CassandraConfig | None = None,
+                 ecfg: EngineConfig = EngineConfig(),
+                 num_slots: int = 4, s_max: int = 256,
+                 eos_id: int | None = None, speculative: bool = True,
+                 rt_extra: dict = {}):
+        if cfg.frontend:
+            raise NotImplementedError(
+                "scheduler admission is token-prompt only for now")
+        self.cfg, self.cass, self.ecfg = cfg, cass, ecfg
+        self.params = params
+        self.num_slots, self.s_max = num_slots, s_max
+        self.eos_id, self.speculative = eos_id, speculative
+        self.rt = Runtime(cfg=cfg, cass=cass,
+                          view="target" if cass else "plain", **rt_extra)
+        packed = cass is not None
+        self.cache = KC.init_cache(cfg, cass, num_slots, s_max,
+                                   packed=packed)
+        self._prefill = jax.jit(
+            lambda p, b, c: M.forward_prefill(self.rt, p, b, c))
+        self._spec = jax.jit(partial(_masked_spec, self.rt, ecfg=ecfg),
+                             donate_argnums=(1,))
+        self._auto = jax.jit(partial(_masked_auto, self.rt),
+                             donate_argnums=(1,))
+        self._install = jax.jit(_install_row, donate_argnums=(0,))
+        self.slots: list[Request | None] = [None] * num_slots
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self.cur = np.zeros((num_slots, 1), np.int32)   # last committed tok
+        self.clock = 0.0                                # decode-cycle clock
+        self.key = jax.random.PRNGKey(0)
+        self.stats = {"cycles": 0, "committed": 0, "accepted": 0,
+                      "drafted": 0, "admitted": 0, "finished": 0}
+        self._next_rid = 0
+
+    def reset(self) -> None:
+        """Clear queue/slots/stats for a fresh run reusing the compiled
+        steps — admission overwrites a slot's entire cache row, so stale
+        cache contents from the previous run are harmless."""
+        self.slots = [None] * self.num_slots
+        self.queue.clear()
+        self.finished = []
+        self.cur[:] = 0
+        self.clock = 0.0
+        self.key = jax.random.PRNGKey(0)
+        self.stats = {k: 0 for k in self.stats}
+        self._next_rid = 0
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, tokens, max_new: int, arrival: float = 0.0,
+               rid: int | None = None) -> Request:
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if len(tokens) + max_new + self.ecfg.gamma + 1 > self.s_max:
+            raise ValueError(
+                f"request needs {len(tokens)}+{max_new}+γ+1 cache slots, "
+                f"s_max={self.s_max}")
+        req = Request(rid=self._next_rid if rid is None else rid,
+                      tokens=tokens, max_new=max_new, arrival=arrival)
+        self._next_rid = req.rid + 1
+        self.queue.append(req)
+        return req
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.slots)
+
+    # -- admission ---------------------------------------------------------
+
+    def _admit(self, req: Request, slot: int) -> None:
+        row = KC.init_cache(self.cfg, self.cass, 1, self.s_max,
+                            packed=self.cass is not None)
+        batch = {"tokens": jnp.asarray(req.tokens)[None, :]}
+        logits, row = self._prefill(self.params, batch, row)
+        self.cache = self._install(self.cache, row, jnp.int32(slot))
+        first = int(jnp.argmax(logits[0, -1]))
+        req.state, req.slot, req.admitted_at = RUNNING, slot, self.clock
+        req.output = [first]
+        self.slots[slot] = req
+        self.cur[slot, 0] = first
+        self.stats["admitted"] += 1
+        self._maybe_retire(req)
+
+    def _admit_ready(self) -> None:
+        """FIFO among *ready* requests — a future arrival queued ahead
+        must not head-of-line-block one that is already due."""
+        for slot in range(self.num_slots):
+            if self.slots[slot] is not None:
+                continue
+            idx = next((i for i, r in enumerate(self.queue)
+                        if r.arrival <= self.clock), None)
+            if idx is None:
+                break
+            req = self.queue[idx]
+            del self.queue[idx]
+            self._admit(req, slot)
+
+    # -- retirement --------------------------------------------------------
+
+    def _maybe_retire(self, req: Request) -> None:
+        # never deliver past max_new, even when EOS lands beyond it
+        capped = req.output[:req.max_new]
+        if self.eos_id is not None and self.eos_id in capped:
+            req.output = capped[:capped.index(self.eos_id) + 1]
+        elif len(req.output) >= req.max_new:
+            req.output = capped
+        else:
+            return
+        req.state, req.finished_at = FINISHED, self.clock
+        self.slots[req.slot] = None
+        self.finished.append(req)
+        self.stats["finished"] += 1
+
+    # -- decode ------------------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit what's ready, run one decode cycle. Returns False when
+        there was nothing to do (idle or all arrivals in the future)."""
+        self._admit_ready()
+        active = np.array([r is not None for r in self.slots])
+        if not active.any():
+            if self.queue:                  # fast-forward to next arrival
+                self.clock = max(self.clock,
+                                 min(r.arrival for r in self.queue))
+                return True
+            return False
+        self.key, sub = jax.random.split(self.key)
+        cur = jnp.asarray(self.cur)
+        act = jnp.asarray(active)
+        if self.speculative:
+            res, self.cache = self._spec(self.params, self.cache, cur,
+                                         sub, act)
+            tokens = np.asarray(res.tokens)
+            valid = np.asarray(res.valid)
+            n = np.asarray(res.n_accepted)
+            nxt = np.asarray(res.next_token)
+            self.stats["accepted"] += int(n[active].sum())
+            self.stats["drafted"] += self.ecfg.gamma * int(active.sum())
+        else:
+            nxt_dev, self.cache = self._auto(self.params, self.cache, cur,
+                                             sub, act)
+            nxt = np.asarray(nxt_dev)
+            tokens = nxt[:, None]
+            valid = np.ones_like(tokens, bool)
+            n = np.zeros(self.num_slots, np.int64)
+        for slot in np.flatnonzero(active):
+            req = self.slots[slot]
+            before = len(req.output)
+            req.output.extend(tokens[slot][valid[slot]].tolist())
+            self.cur[slot, 0] = nxt[slot]
+            self._maybe_retire(req)
+            # delivered tokens only: retirement truncates past EOS/max_new
+            self.stats["committed"] += len(req.output) - before
+        self.stats["cycles"] += 1
+        self.clock += 1.0
+        return True
+
+    def run(self, max_cycles: int = 100_000) -> list[Request]:
+        """Drive until every submitted request finishes."""
+        for _ in range(max_cycles):
+            if not self.step():
+                break
+        if not self.idle:
+            raise RuntimeError(f"scheduler not idle after {max_cycles} "
+                               "cycles")
+        return self.finished
+
+    def summary(self) -> dict:
+        s = dict(self.stats)
+        s["tokens_per_cycle"] = s["committed"] / max(s["cycles"], 1)
+        s["acceptance"] = (s["accepted"] / s["drafted"]
+                           if s["drafted"] else None)
+        if self.finished:
+            lat = [r.finished_at - r.arrival for r in self.finished]
+            s["mean_latency_cycles"] = float(np.mean(lat))
+        return s

@@ -10,6 +10,9 @@ from repro.kernels import ops, ref
 
 jax.config.update("jax_platform_name", "cpu")
 
+# interpret-mode pallas_call compiles dominate (~1 min of CPU)
+pytestmark = pytest.mark.slow
+
 
 def rand_bf16(key, shape, scale=1.0):
     return (jax.random.normal(key, shape) * scale).astype(jnp.bfloat16)

@@ -16,6 +16,10 @@ from repro.serving import kvcache as KC
 
 jax.config.update("jax_platform_name", "cpu")
 
+# every test jit-compiles train+prefill+decode for a full arch — minutes of
+# CPU across the 12-arch matrix
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

@@ -1,0 +1,178 @@
+"""Continuous-batching scheduler: admission, slot recycling, early exit.
+
+Uses plain (uncompressed) params so draft == target: the speculative path
+compiles once and accepts everything, which keeps this module in the fast
+tier while still exercising the full admit → decode → retire → recycle
+lifecycle. Schedulers are module-scoped and ``reset()`` between tests so
+the jit cache is paid for once.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import EngineConfig
+from repro.serving.scheduler import FINISHED, Scheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+MAX_NEW = 6
+GAMMA = 2
+S_MAX = 8 + MAX_NEW + GAMMA + 1
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("llama3-8b", smoke=True)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def spec_sched(model):
+    cfg, params = model
+    return Scheduler(cfg, params, cass=None, ecfg=EngineConfig(gamma=GAMMA),
+                     num_slots=2, s_max=S_MAX, rt_extra={"ssm_chunk": 8})
+
+
+@pytest.fixture(scope="module")
+def auto_sched(model):
+    cfg, params = model
+    return Scheduler(cfg, params, cass=None, ecfg=EngineConfig(gamma=GAMMA),
+                     num_slots=2, s_max=S_MAX, speculative=False,
+                     rt_extra={"ssm_chunk": 8})
+
+
+def _prompts(cfg, n, length=8, seed=1):
+    key = jax.random.PRNGKey(seed)
+    return [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                          (length,), 0, cfg.vocab_size))
+            for i in range(n)]
+
+
+def test_recycling_drains_queue(model, spec_sched):
+    """5 requests through 2 slots: every request retires with exactly
+    max_new tokens and slots are reused across the queue."""
+    cfg, _ = model
+    spec_sched.reset()
+    spec_sched.eos_id = None
+    reqs = [spec_sched.submit(p, max_new=MAX_NEW)
+            for p in _prompts(cfg, 5)]
+    done = spec_sched.run()
+    assert len(done) == 5
+    assert all(r.state == FINISHED for r in reqs)
+    assert all(len(r.output) == MAX_NEW for r in reqs)
+    assert spec_sched.idle
+    # more requests than slots => at least one slot served two requests
+    assert len({r.slot for r in reqs}) == 2
+
+
+def test_recycled_slot_isolated(model, spec_sched):
+    """A slot's previous occupant must not leak into the next: the same
+    prompt produces identical tokens on first admission and after
+    recycling behind a different request."""
+    cfg, _ = model
+    spec_sched.reset()
+    spec_sched.eos_id = None
+    p = _prompts(cfg, 2)
+    a = spec_sched.submit(p[0], max_new=MAX_NEW)
+    b = spec_sched.submit(p[1], max_new=MAX_NEW)
+    c = spec_sched.submit(p[0], max_new=MAX_NEW)  # recycled slot
+    spec_sched.run()
+    assert a.output == c.output
+    assert a.output != b.output
+
+
+def test_eos_early_exit(model, spec_sched):
+    """A row hitting EOS retires early and frees its slot mid-queue."""
+    cfg, _ = model
+    spec_sched.reset()
+    spec_sched.eos_id = None
+    p = _prompts(cfg, 1)[0]
+    probe = spec_sched.submit(p, max_new=MAX_NEW)
+    spec_sched.run()
+    eos = probe.output[2]
+
+    spec_sched.reset()
+    spec_sched.eos_id = eos
+    req = spec_sched.submit(p, max_new=MAX_NEW)
+    spec_sched.run()
+    assert req.output == probe.output[:3]
+    assert req.output[-1] == eos
+    assert len(req.output) < MAX_NEW
+
+
+def test_eos_beyond_max_new_capped(model, spec_sched):
+    """EOS landing past max_new must not extend delivery beyond max_new."""
+    from repro.serving.scheduler import RUNNING, Request
+    spec_sched.reset()
+    spec_sched.eos_id = 7
+    r = Request(rid=99, tokens=np.zeros(4, np.int32), max_new=4)
+    r.state, r.slot = RUNNING, 0
+    r.output = [1, 2, 3, 4, 5, 7]        # cycle overshot; EOS after cap
+    spec_sched.slots[0] = r
+    spec_sched._maybe_retire(r)
+    assert r.output == [1, 2, 3, 4]
+    assert r.done
+    spec_sched.reset()
+
+
+def test_ready_request_skips_future_arrival(model, spec_sched):
+    """A request due now must not be head-of-line blocked by an earlier
+    submission whose arrival is in the future."""
+    cfg, _ = model
+    spec_sched.reset()
+    spec_sched.eos_id = None
+    p = _prompts(cfg, 2)
+    late = spec_sched.submit(p[0], max_new=MAX_NEW, arrival=40.0)
+    ready = spec_sched.submit(p[1], max_new=MAX_NEW, arrival=0.0)
+    spec_sched.run()
+    assert ready.admitted_at == 0.0
+    assert late.admitted_at >= 40.0
+
+
+def test_future_arrivals_fast_forward(model, spec_sched):
+    """Arrivals beyond the clock are admitted after a fast-forward, not
+    spun on."""
+    cfg, _ = model
+    spec_sched.reset()
+    spec_sched.eos_id = None
+    p = _prompts(cfg, 2)
+    spec_sched.submit(p[0], max_new=MAX_NEW, arrival=0.0)
+    late = spec_sched.submit(p[1], max_new=MAX_NEW, arrival=50.0)
+    done = spec_sched.run()
+    assert len(done) == 2
+    assert late.admitted_at >= 50.0
+
+
+def test_oversized_request_rejected(model, spec_sched):
+    cfg, _ = model
+    with pytest.raises(ValueError):
+        spec_sched.submit(np.zeros(S_MAX, np.int32), max_new=MAX_NEW)
+
+
+def test_autoregressive_matches_speculative(model, spec_sched, auto_sched):
+    """Plain params: the speculative scheduler (identity draft) and the
+    autoregressive scheduler are the same greedy decoder."""
+    cfg, _ = model
+    prompts = _prompts(cfg, 3)
+    outs = []
+    for sched in (spec_sched, auto_sched):
+        sched.reset()
+        sched.eos_id = None
+        reqs = [sched.submit(p, max_new=MAX_NEW) for p in prompts]
+        sched.run()
+        outs.append([r.output for r in reqs])
+    assert all(len(o) == MAX_NEW for o in outs[0] + outs[1])
+    # q=1 AR and q=γ+1 verify passes reduce in different orders, so a
+    # near-tie argmax may flip on some platforms; require agreement on
+    # most traces rather than bitwise equality of all of them
+    assert sum(a == b for a, b in zip(outs[0], outs[1])) >= 2
+    # aggregate throughput: autoregressive is bounded by 1 tok/cycle/slot;
+    # identity-draft speculation must beat it on the same trace
+    auto_tpc = auto_sched.summary()["tokens_per_cycle"]
+    spec_tpc = spec_sched.summary()["tokens_per_cycle"]
+    assert auto_tpc <= auto_sched.num_slots + 1e-9
+    assert spec_tpc > auto_tpc

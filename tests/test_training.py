@@ -15,6 +15,9 @@ from repro.training.trainer import TrainConfig, grads_fn
 
 jax.config.update("jax_platform_name", "cpu")
 
+# jit'd train_step + grad-accum compiles per test (~30 s of CPU)
+pytestmark = pytest.mark.slow
+
 
 def _setup(arch="llama3-8b", state_dtype="fp32"):
     cfg = get_config(arch, smoke=True)
