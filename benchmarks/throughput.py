@@ -6,8 +6,16 @@ speculative decode vs the bf16 autoregressive baseline — at arrival rates
 λ=16 is effectively a burst). Reports tokens/s (wall), tokens-per-cycle,
 acceptance, and mean latency in cycles, as a JSON report.
 
+``--paged`` additionally replays a mixed-prompt-length trace through the
+slot layout and the paged (block-pool) layout and reports KV residency:
+tokens resident per MB of KV memory held, peak reserved tokens, and
+whether per-request outputs are identical (lossless paging). The slot
+layout must reserve the longest request's S_max for every row; paging
+reserves per-request blocks, so mixed lengths fit ≥1.5× more resident
+tokens at equal memory.
+
   PYTHONPATH=src python benchmarks/throughput.py [--trained] \
-      [--rates 1,4,16] [--out /tmp/throughput.json]
+      [--rates 1,4,16] [--paged] [--out /tmp/throughput.json]
 """
 import argparse
 import json
@@ -43,6 +51,73 @@ def run_trace(sched: Scheduler, prompts, max_new: int, lam: float) -> dict:
     return s
 
 
+def _kv_bytes_per_token(sched: Scheduler) -> float:
+    """Bytes of attention-store KV per resident token (layout-agnostic —
+    both layouts use identical per-token stores)."""
+    from repro.core.format import tree_nbytes
+    attn = [e for g in sched.cache["dec"] for e in g.values()
+            if "conv" not in e]
+    tokens = (sched.num_blocks * sched.block_size if sched.paged
+              else sched.num_slots * sched.s_max)
+    return tree_nbytes(attn) / max(tokens, 1)
+
+
+def run_paged_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
+    """Mixed-length trace through slot vs paged layouts at equal settings:
+    residency per MB and per-request output identity (lossless paging)."""
+    lens = [int(x) for x in args.mixed_lens.split(",")]
+    key = jax.random.PRNGKey(args.seed + 2)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(key, i), (lens[i % len(lens)],), 0,
+        cfg.vocab_size)) for i in range(args.requests)]
+    s_max = max(lens) + args.max_new + args.gamma + 1
+    block = args.block_size
+    s_max += (-s_max) % block      # align so both layouts see one capacity
+    out = {"s_max": s_max, "block_size": block, "runs": {}}
+    outputs = {}
+    for mode in ("slot", "paged"):
+        # construct per mode (and drop before the next) so only one KV
+        # cache + executable set is resident at a time
+        sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
+                          num_slots=args.slots, s_max=s_max,
+                          rt_extra=rt_extra, paged=mode == "paged",
+                          block_size=block)
+        reqs = [sched.submit(p, max_new=args.max_new, arrival=i / 4.0)
+                for i, p in enumerate(prompts)]
+        t0 = time.time()
+        sched.run()
+        s = sched.summary()
+        bpt = _kv_bytes_per_token(sched)
+        held_mb = s["peak_reserved_tokens"] * bpt / 1e6
+        s["wall_s"] = time.time() - t0
+        s["kv_bytes_per_token"] = bpt
+        s["peak_kv_held_mb"] = held_mb
+        s["resident_tokens_per_mb"] = (s["peak_resident_tokens"]
+                                       / max(held_mb, 1e-9))
+        out["runs"][mode] = s
+        outputs[mode] = [r.output for r in reqs]
+        print(f"[paged-compare:{mode:>5}] resident peak="
+              f"{s['peak_resident_tokens']} tok, held="
+              f"{held_mb:.3f}MB, tokens/MB="
+              f"{s['resident_tokens_per_mb']:.0f}")
+        del sched
+    ratio = (out["runs"]["paged"]["resident_tokens_per_mb"]
+             / max(out["runs"]["slot"]["resident_tokens_per_mb"], 1e-9))
+    out["residency_ratio"] = ratio
+    out["outputs_identical"] = outputs["slot"] == outputs["paged"]
+    # hard gates — this benchmark is the only automated exercise of the
+    # packed+paged combination, so regressions here must fail the run
+    # (nightly CI), not just print
+    out["passed"] = out["outputs_identical"] and ratio >= 1.5
+    print(f"[paged-compare] paged fits {ratio:.2f}x more resident tokens "
+          f"per MB than the slot layout "
+          f"(outputs identical: {out['outputs_identical']})")
+    if not out["passed"]:
+        print("[paged-compare] FAIL: expected identical outputs and "
+              ">=1.5x residency")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
@@ -52,6 +127,13 @@ def main(argv=None):
     ap.add_argument("--gamma", type=int, default=3)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--rates", default="1,4,16")
+    ap.add_argument("--paged", action="store_true",
+                    help="also compare slot vs paged KV residency on a "
+                    "mixed-length trace (lossless paging check)")
+    ap.add_argument("--mixed-lens", default="8,12,8,64",
+                    help="cycled prompt lengths for the --paged trace")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV block size (tokens per block)")
     ap.add_argument("--trained", action="store_true",
                     help="use the cached 300-step smoke checkpoint "
                     "(realistic acceptance) instead of random init")
@@ -104,6 +186,10 @@ def main(argv=None):
                   f"  cycles={s['cycles']:4d}"
                   f"  latency={s.get('mean_latency_cycles', 0):6.1f}cyc"
                   f"  acceptance={s['acceptance']}")
+    if args.paged:
+        report["paged_compare"] = run_paged_compare(
+            cfg, packed, cass, EngineConfig(gamma=args.gamma), args,
+            rt_extra)
     spec = [r for r in report["runs"] if r["mode"] == "speculative"]
     auto = [r for r in report["runs"] if r["mode"] == "autoregressive"]
     for s, a in zip(spec, auto):
@@ -117,6 +203,8 @@ def main(argv=None):
         print(f"report written to {args.out}")
     else:
         print(out)
+    if args.paged and not report["paged_compare"]["passed"]:
+        raise SystemExit(1)
     return report
 
 

@@ -42,16 +42,31 @@ def _assemble(draft_tokens: jax.Array, n: jax.Array,
 
 
 def greedy_accept(draft_tokens: jax.Array,
-                  target_logits: jax.Array) -> AcceptResult:
+                  target_logits: jax.Array,
+                  tie_margin: float = 0.0) -> AcceptResult:
     """Greedy rule. draft_tokens (B, gamma); target_logits (B, gamma+1, V).
 
     target_logits[:, i] is the target distribution *after* seeing the first
     i drafted tokens; position gamma provides the bonus token when every
     draft matches.
+
+    ``tie_margin > 0`` also accepts a drafted token whose target logit is
+    within the margin of the target max — a near-tie the draft and target
+    views may legitimately rank differently (draft-view exponent coding is
+    approximate for delta-mode blocks; shapes/reduction orders may differ).
+    At noise scale this is as faithful as the argmax itself (which is not
+    well-defined under that noise); the strict ``tie_margin=0`` default is
+    the lossless Table III rule.
     """
     target_argmax = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)
     gamma = draft_tokens.shape[1]
     match = draft_tokens == target_argmax[:, :gamma]
+    if tie_margin > 0.0:
+        tmax = jnp.max(target_logits[:, :gamma].astype(jnp.float32), axis=-1)
+        dlog = jnp.take_along_axis(
+            target_logits[:, :gamma].astype(jnp.float32),
+            draft_tokens[..., None], axis=-1)[..., 0]
+        match = match | (dlog >= tmax - tie_margin)
     n = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
     next_token = jnp.take_along_axis(
         target_argmax, n[:, None], axis=1)[:, 0]

@@ -8,11 +8,23 @@ cycles, acceptance rate and the bandwidth-model speedup estimate.
 
 ``--scheduler`` serves the same requests through the continuous-batching
 scheduler instead of the fixed-batch engine: requests are admitted into
-``--slots`` cache rows, finish independently, and free slots are recycled
-by the queue:
+``--slots`` cache rows via chunked batched prefill (one compile bucket
+for all prompt lengths), finish independently, and free slots are
+recycled by the queue:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
       --variant 1 --scheduler --slots 2 --requests 6 --max-new 32
+
+``--paged`` switches the scheduler's KV cache from per-row (slots, S_max)
+regions to a global pool of ``--block-size``-token blocks addressed
+through per-request block tables: short requests stop stranding the
+S_max tail, and ``--num-blocks`` caps total KV memory independently of
+the per-request bound (lossless — outputs are identical to the slot
+layout):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --variant 1 --scheduler --paged --block-size 16 --num-blocks 24 \
+      --slots 4 --requests 8 --max-new 32
 """
 from __future__ import annotations
 
@@ -48,8 +60,27 @@ def run(argv=None):
     ap.add_argument("--scheduler", action="store_true",
                     help="continuous batching through --slots cache rows")
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV: a global block pool + per-request "
+                    "block tables instead of per-row (slots, S_max) "
+                    "regions (scheduler mode only)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block; smaller blocks waste less "
+                    "on the last partial block but widen the block table")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="total pool blocks incl. the reserved trash "
+                    "block; default sizes the pool to the slot layout's "
+                    "capacity (slots x ceil(S_max/block) + 1). Shrink it "
+                    "to cap KV memory — admission then waits for blocks")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="prefill chunk: prompts are prefilled in fixed "
+                    "chunks of this many tokens so all admissions share "
+                    "one compile bucket")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.paged and not args.scheduler:
+        ap.error("--paged requires --scheduler (the fixed-batch engine "
+                 "has no block pool)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)
@@ -89,7 +120,10 @@ def run(argv=None):
         s_max = args.prompt_len + args.max_new + args.gamma + 1
         sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
                           num_slots=args.slots, s_max=s_max,
-                          speculative=args.variant != 0, rt_extra=rt_extra)
+                          speculative=args.variant != 0, rt_extra=rt_extra,
+                          paged=args.paged, block_size=args.block_size,
+                          num_blocks=args.num_blocks,
+                          chunk_size=args.chunk_size)
         t0 = time.time()
         for i in range(args.requests):
             sched.submit(prompt["tokens"][i % b], max_new=args.max_new)
@@ -101,6 +135,12 @@ def run(argv=None):
               f"acceptance={s['acceptance']}, "
               f"mean latency={s.get('mean_latency_cycles', 0):.1f} cycles, "
               f"wall={dt:.1f}s")
+        if args.paged:
+            print(f"[paged] pool={s['pool_blocks']} blocks x "
+                  f"{s['block_size']} tok, high water="
+                  f"{s['pool_high_water_blocks']} blocks, peak resident="
+                  f"{s['peak_resident_tokens']} tok (reserved "
+                  f"{s['peak_reserved_tokens']})")
         for r in sorted(done, key=lambda r: r.rid):
             print(f"  req {r.rid}: {len(r.output)} tokens, "
                   f"first {r.output[:8]}")

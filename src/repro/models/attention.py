@@ -259,9 +259,16 @@ def mla_attention(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array,
                   ) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
     """MLA layer. Cache = (c, k_rope) latents, NOT per-head K/V.
 
-    Full-seq: naive (materialise per-head k,v from the latent — cheaper
-    scores). Cached decode (``prefix_latent`` = (c, kr) prefix from the
-    cache view ++ scratch): absorbed (scores in latent space).
+    Cached decode (``prefix_latent`` = (c, kr) prefix from the cache view
+    ++ scratch) runs *absorbed* (scores and context in latent space).
+    Full-seq runs the SAME absorbed math up to 2048 tokens so prefill,
+    train and incremental decode share one association order and no bf16
+    k_nope/v round-trip — the naive path (materialised per-head K/V +
+    flash) used to sit ~1e-2 off the absorbed path, which deepseek's MoE
+    router amplified into expert flips (the prefill-vs-decode drift).
+    Beyond 2048 tokens the latent score matrix is the quadratic-memory
+    killer, so long prefill stays naive+flash (tolerance documented in
+    tests/test_models.py).
     """
     cfg = rt.cfg
     b, sq, _ = x.shape
@@ -269,8 +276,8 @@ def mla_attention(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array,
     q_nope, q_rope = _mla_q(rt, p, x, positions)
     new_c, new_kr = mla_latent(rt, p, x, positions)
 
-    if prefix_latent is None:
-        # naive path: per-head K/V from latent
+    if prefix_latent is None and sq > 2048:
+        # naive path: per-head K/V from latent, chunked flash attention
         w_uk, w_uv = _kv_b_split(rt, p)
         k_nope = jnp.einsum("bsl,lhn->bshn", new_c.astype(jnp.float32),
                             w_uk.astype(jnp.float32)).astype(x.dtype)
@@ -282,31 +289,37 @@ def mla_attention(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array,
             axis=-1)
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
         q = rt.shard_act(q, ("batch", None, "heads", None))
-        if sq > 2048:
-            out = _attend_flash(q, k, vv, causal=causal, q_offset=0,
-                                chunk_q=rt.attn_chunk_q,
-                                chunk_k=rt.attn_chunk_k)
-        else:
-            mask = causal_mask(sq, sq, 0) if causal else None
-            out = _attend_dense(q, k, vv, mask, scale)
+        out = _attend_flash(q, k, vv, causal=causal, q_offset=0,
+                            chunk_q=rt.attn_chunk_q,
+                            chunk_k=rt.attn_chunk_k)
     else:
-        # absorbed path over the latent cache (sequence-parallel: latents
-        # token-sharded, q replicated — mirrors the GQA decode layout)
+        # absorbed path over the latents (sequence-parallel decode:
+        # latents token-sharded, q replicated — mirrors GQA decode)
         w_uk, w_uv = _kv_b_split(rt, p)
-        pc, pkr = prefix_latent
-        pc = rt.shard_act(pc, ("batch", "seq_kv", None))
-        pkr = rt.shard_act(pkr, ("batch", "seq_kv", None))
-        c_all = jnp.concatenate([pc, new_c.astype(pc.dtype)], axis=1)
-        kr_all = jnp.concatenate([pkr, new_kr.astype(pkr.dtype)], axis=1)
+        if prefix_latent is None:
+            c_all, kr_all = new_c, new_kr
+            mask = causal_mask(sq, sq, 0) if causal else None
+        else:
+            pc, pkr = prefix_latent
+            pc = rt.shard_act(pc, ("batch", "seq_kv", None))
+            pkr = rt.shard_act(pkr, ("batch", "seq_kv", None))
+            c_all = jnp.concatenate([pc, new_c.astype(pc.dtype)], axis=1)
+            kr_all = jnp.concatenate([pkr, new_kr.astype(pkr.dtype)],
+                                     axis=1)
+            mask = full_mask(prefix_valid, sq)
         q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
                            w_uk.astype(jnp.float32))         # (B,sq,H,lora)
+        if prefix_latent is None:
+            # full-seq: heads-sharded like the naive path; decode keeps q
+            # replicated against token-sharded latents (MagicDec layout)
+            q_eff = rt.shard_act(q_eff, ("batch", None, "heads", None))
         s_nope = jnp.einsum("bqhl,bkl->bhqk", q_eff,
                             c_all.astype(jnp.float32))
         s_rope = jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
                             kr_all.astype(jnp.float32))
         scores = (s_nope + s_rope) * scale
-        mask = full_mask(prefix_valid, sq)
-        scores = jnp.where(mask, scores, NEG_INF)
+        if mask is not None:
+            scores = jnp.where(mask, scores, NEG_INF)
         pattn = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhqk,bkl->bqhl", pattn,
                          c_all.astype(jnp.float32))          # (B,sq,H,lora)

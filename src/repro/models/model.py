@@ -209,12 +209,17 @@ def init_params(cfg: ModelConfig, key: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _attn_entry(rt: Runtime, bp: dict, x, positions, *, causal, centry,
-                scratch, length, scratch_len, book, s_max, ventry=None):
+                scratch, length, scratch_len, book, s_max, ventry=None,
+                table=None):
     """Attention sub-block in any mode. Returns (out, upd).
 
     ``ventry`` — optional pre-materialised dense view of the packed cache
     entry (the draft view is decoded once per speculative cycle and reused
     across the γ draft steps — §Perf iteration A4).
+    ``table`` — paged caches only: (B,MB) block table; the cache entry (or
+    its ventry) is a block pool decoded pool-wide, and the per-request
+    prefix is assembled by ``kvcache.gather_block_leaf``. ``s_max`` is
+    then the virtual per-request capacity MB*BS.
     """
     cfg = rt.cfg
     cass = rt.cass
@@ -246,6 +251,9 @@ def _attn_entry(rt: Runtime, bp: dict, x, positions, *, causal, centry,
                                book)
             pkr = KC.read_store(cass, centry["kr"], cfg.qk_rope_dim, view,
                                 book)
+        if table is not None:
+            pc = KC.gather_block_leaf(pc, table)
+            pkr = KC.gather_block_leaf(pkr, table)
         valid = smax_valid
         if scratch is not None:
             pc = jnp.concatenate([pc, scratch["c"].astype(pc.dtype)], axis=1)
@@ -261,6 +269,9 @@ def _attn_entry(rt: Runtime, bp: dict, x, positions, *, causal, centry,
     else:
         pk = KC.read_store(cass, centry["k"], cfg.hd, view, book)
         pv = KC.read_store(cass, centry["v"], cfg.hd, view, book)
+    if table is not None:
+        pk = KC.gather_block_leaf(pk, table)
+        pv = KC.gather_block_leaf(pv, table)
     valid = smax_valid
     if scratch is not None:
         pk = jnp.concatenate([pk, scratch["k"].astype(pk.dtype)], axis=1)
@@ -274,7 +285,7 @@ def _attn_entry(rt: Runtime, bp: dict, x, positions, *, causal, centry,
 def _block(rt: Runtime, bp: dict, entry: str, x, positions, *, mode,
            causal=True, centry=None, scratch=None, length=None,
            scratch_len=None, book=None, s_max=0, cross_entry=None,
-           enc_out=None, valid_len=None, ventry=None):
+           enc_out=None, valid_len=None, ventry=None, table=None):
     """One transformer block. Returns (x, cache_update, moe_aux)."""
     cfg = rt.cfg
     upd: dict = {}
@@ -283,7 +294,8 @@ def _block(rt: Runtime, bp: dict, entry: str, x, positions, *, mode,
         out, kv_upd = _attn_entry(rt, bp, h, positions, causal=causal,
                                   centry=centry, scratch=scratch,
                                   length=length, scratch_len=scratch_len,
-                                  book=book, s_max=s_max, ventry=ventry)
+                                  book=book, s_max=s_max, ventry=ventry,
+                                  table=table)
         if kv_upd is not None and mode in ("decode", "prefill"):
             upd = dict(kv_upd)
     else:
@@ -335,7 +347,8 @@ def _block(rt: Runtime, bp: dict, entry: str, x, positions, *, mode,
 def _scan_groups(rt: Runtime, groups_params, entries_per_group, x, positions,
                  *, mode, causal=True, cache_groups=None, scratch_groups=None,
                  cross_groups=None, length=None, scratch_len=None, book=None,
-                 s_max=0, enc_out=None, valid_len=None, view_groups=None):
+                 s_max=0, enc_out=None, valid_len=None, view_groups=None,
+                 table=None):
     """Run all layer groups; scan over repeats within each group."""
     aux0 = {"balance_loss": jnp.float32(0.0), "dropped": jnp.int32(0)}
     updates_groups = []
@@ -377,7 +390,7 @@ def _scan_groups(rt: Runtime, groups_params, entries_per_group, x, positions,
                     causal=causal, centry=centry, scratch=scr, length=length,
                     scratch_len=scratch_len, book=book, s_max=s_max,
                     cross_entry=xen, enc_out=enc_out, valid_len=valid_len,
-                    ventry=ven)
+                    ventry=ven, table=table)
                 if upd:
                     g_upd[ekey] = upd
                 aux = {"balance_loss": aux["balance_loss"]
@@ -509,6 +522,10 @@ def forward_prefill(rt: Runtime, params: Params, batch: dict, cache: dict):
 def _commit_prefill(rt: Runtime, cache, updates_groups, s, book):
     cfg = rt.cfg
     cass = rt.cass
+    if KC.is_paged(cache):
+        raise NotImplementedError(
+            "paged caches are filled by chunked prefill "
+            "(engine.chunk_prefill_step), not forward_prefill")
     packed = book is not None
     new_dec = []
     new_cross = [] if "cross" in cache else None
@@ -623,21 +640,27 @@ def forward_decode(rt: Runtime, params: Params, tokens: jax.Array,
         rt, params["dec"], _entries(cfg), x, positions, mode="decode",
         cache_groups=cache["dec"], scratch_groups=scratch,
         cross_groups=cache.get("cross"), length=length, scratch_len=slen,
-        book=book, s_max=s_max, view_groups=cache_view)
+        book=book, s_max=s_max, view_groups=cache_view,
+        table=cache.get("block_table"))
     x = L.norm(rt, params["final_norm"], x)
     return L.unembed(rt, params, x), upd
 
 
 def _cache_s_max(cfg: ModelConfig, cache: dict) -> int:
-    """Token-axis size of the cache stores (static)."""
+    """Virtual per-request token capacity of the cache (static).
+
+    Slot layout: the S axis of the stores. Paged layout: the stores hold
+    (R,NB,BS,…) pool blocks, so capacity is table-width MB × BS.
+    """
+    mb = cache["block_table"].shape[1] if KC.is_paged(cache) else 1
     for g in cache["dec"]:
         for e in g.values():
             if "k" in e:
                 leaf = jax.tree_util.tree_leaves(e["k"])[0]
-                return leaf.shape[2]       # (R,B,S,…)
+                return mb * leaf.shape[2]       # (R,B,S,…) | (R,NB,BS,…)
             if "c" in e:
                 leaf = jax.tree_util.tree_leaves(e["c"])[0]
-                return leaf.shape[2]
+                return mb * leaf.shape[2]
     return 0
 
 

@@ -1,0 +1,119 @@
+"""Host-side block allocator for the paged KV cache.
+
+The device pool is a fixed array of ``num_blocks`` token blocks (block 0 is
+reserved as the *trash* block — every unmapped block-table entry points at
+it, so masked rows and padded chunk slots scatter their garbage there
+instead of into another request's memory). The allocator hands out the
+remaining blocks and enforces a **reservation discipline**: a request is
+admitted only when its worst-case block need (prompt + max_new + γ + 1,
+rounded up to blocks) fits in the unreserved pool, but physical blocks are
+allocated lazily as the sequence actually grows into them. Reservations
+guarantee an admitted request can always run to completion (no mid-flight
+OOM / deadlock); lazy allocation keeps the measured high-water mark honest.
+"""
+from __future__ import annotations
+
+TRASH_BLOCK = 0
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` fixed-size blocks.
+
+    Invariants (property-tested in ``tests/test_kvcache.py``):
+      * a block is never handed out twice while live
+      * ``len(free) + live == num_blocks - 1`` (trash block excluded)
+      * ``allocated(owner) <= reserved(owner)`` for every owner
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (one is the trash block)")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, TRASH_BLOCK, -1))
+        self._live: set[int] = set()
+        self._reserved: dict[object, int] = {}   # owner -> blocks reserved
+        self._owned: dict[object, list[int]] = {}
+        self.high_water = 0
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (pool minus the trash block)."""
+        return self.num_blocks - 1
+
+    @property
+    def reserved_total(self) -> int:
+        return sum(self._reserved.values())
+
+    @property
+    def allocated_total(self) -> int:
+        return len(self._live)
+
+    def can_reserve(self, n: int) -> bool:
+        return self.reserved_total + n <= self.capacity
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def reserve(self, owner, n: int) -> None:
+        """Claim worst-case capacity for ``owner`` (admission gate)."""
+        if owner in self._reserved:
+            raise ValueError(f"{owner!r} already holds a reservation")
+        if not self.can_reserve(n):
+            raise ValueError(
+                f"reservation of {n} blocks exceeds capacity "
+                f"({self.reserved_total}/{self.capacity} reserved)")
+        self._reserved[owner] = n
+        self._owned[owner] = []
+
+    def alloc(self, owner) -> int:
+        """Hand ``owner`` one physical block from its reservation."""
+        owned = self._owned[owner]
+        if len(owned) >= self._reserved[owner]:
+            raise ValueError(f"{owner!r} exceeded its reservation of "
+                             f"{self._reserved[owner]} blocks")
+        blk = self._free.pop()
+        self._live.add(blk)
+        owned.append(blk)
+        self.high_water = max(self.high_water, len(self._live))
+        return blk
+
+    def grow_to(self, owner, n_tokens: int, block_size: int) -> list[int]:
+        """Allocate blocks until ``owner`` covers ``n_tokens``; returns the
+        newly allocated block ids (possibly empty)."""
+        owned = self._owned[owner]
+        new = []
+        while len(owned) * block_size < n_tokens:
+            new.append(self.alloc(owner))
+        return new
+
+    def blocks_of(self, owner) -> list[int]:
+        return self._owned[owner]
+
+    def release(self, owner) -> list[int]:
+        """Free every block of ``owner`` and drop its reservation."""
+        owned = self._owned.pop(owner)
+        del self._reserved[owner]
+        for blk in owned:
+            self._live.discard(blk)
+            self._free.append(blk)
+        return owned
+
+    # -- introspection -----------------------------------------------------
+
+    def check_invariants(self) -> None:
+        free = set(self._free)
+        assert not (free & self._live), "block both free and live"
+        assert len(free) == len(self._free), "duplicate block in free list"
+        assert len(free) + len(self._live) == self.capacity, \
+            "free-list conservation violated"
+        owned_all: list[int] = []
+        for owner, owned in self._owned.items():
+            assert len(owned) <= self._reserved[owner]
+            owned_all.extend(owned)
+        assert len(owned_all) == len(set(owned_all)) == len(self._live)
+        assert TRASH_BLOCK not in self._live and TRASH_BLOCK not in free
+
+
+def blocks_needed(n_tokens: int, block_size: int) -> int:
+    return -(-n_tokens // block_size)

@@ -40,6 +40,17 @@ class EngineConfig:
     gamma: int = 5
     greedy: bool = True
     temperature: float = 1.0
+    # shape-stable draft: run every draft step at the verify pass's q=γ+1
+    # width over the growing token prefix (no scratch). Identical operand
+    # shapes mean identical XLA reduction orders, so with an identity
+    # format the q=1-style draft/verify near-tie argmax flips disappear
+    # and identity-draft acceptance is exactly 1.0. Costs (γ+1)× draft
+    # FLOPs; the memory-bound weight reads (the edge bottleneck) are
+    # unchanged.
+    stable_draft: bool = False
+    # greedy near-tie acceptance margin (see speculative.greedy_accept);
+    # 0.0 is the strict lossless rule.
+    tie_margin: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -56,7 +67,8 @@ def make_scratch(cfg: ModelConfig, cache: dict, gamma: int) -> list:
             centry = cache["dec"][gi][ekey]
             if entry[0] == "a":
                 leaf = jax.tree_util.tree_leaves(centry)[0]
-                r, b = leaf.shape[0], leaf.shape[1]
+                # paged pools are (R,NB,BS,…): batch comes from `length`
+                r, b = leaf.shape[0], cache["length"].shape[0]
                 if cfg.mla:
                     gdict[ekey] = {
                         "c": jnp.zeros((r, b, gamma, cfg.kv_lora_rank),
@@ -103,11 +115,16 @@ def _scratch_write(scratch: list, updates: list, slot: int) -> list:
 # ---------------------------------------------------------------------------
 
 def commit(rt: Runtime, cache: dict, updates: list, n: jax.Array) -> dict:
-    """Append target-recomputed state for n+1 accepted tokens per row."""
+    """Append target-recomputed state for n+1 accepted tokens per row.
+
+    Slot caches append at per-row offsets inside each row's (S_max,)
+    region; paged caches scatter the same token runs into the block pool
+    through the (traced) block table."""
     cfg, cass = rt.cfg, rt.cass
     book = KC.cache_codebook(cache)
     packed = book is not None
     length = cache["length"]                          # (B,)
+    table = cache.get("block_table")
     new_dec = []
     for gi, gupd in enumerate(updates):
         gcache = dict(cache["dec"][gi])
@@ -122,9 +139,16 @@ def commit(rt: Runtime, cache: dict, updates: list, n: jax.Array) -> dict:
                         new = jax.vmap(
                             lambda x, d=d: KC.encode_store(cass, x, d, book)
                         )(new)
-                    centry[nm] = jax.vmap(
-                        lambda c, nw: KC.append_store_batched(c, nw, length)
-                    )(centry[nm], new)
+                    if table is None:
+                        centry[nm] = jax.vmap(
+                            lambda c, nw: KC.append_store_batched(c, nw,
+                                                                  length)
+                        )(centry[nm], new)
+                    else:
+                        centry[nm] = jax.vmap(
+                            lambda c, nw: KC.append_paged_batched(
+                                c, nw, table, length)
+                        )(centry[nm], new)
             elif "h_all" in upd:
                 # SSM rollback: state after accepting n+1 tokens
                 h_all = upd["h_all"]                  # (R,B,q,di,ns)
@@ -161,28 +185,47 @@ def spec_decode_step(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
     rt_d = dataclasses.replace(rt, view="draft" if rt.cass else "plain")
     rt_t = dataclasses.replace(rt, view="target" if rt.cass else "plain")
 
-    scratch = make_scratch(cfg, cache, gamma)
+    def sample(lg, key):
+        if ecfg.greedy:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32), key
+        key, sub = jax.random.split(key)
+        return jax.random.categorical(
+            sub, lg / ecfg.temperature).astype(jnp.int32), key
+
     # decode the draft view of the packed cache ONCE for all γ steps
     draft_view = M.materialize_cache_view(rt_d, cache)
-    tok = cur_tokens
     draft_tokens = []
     draft_logits = []
-    for i in range(gamma):
-        logits, upd = M.forward_decode(rt_d, params, tok, cache,
-                                       scratch=scratch,
-                                       scratch_len=jnp.int32(i),
-                                       cache_view=draft_view)
-        scratch = _scratch_write(scratch, upd, i)
-        lg = logits[:, -1]
-        if ecfg.greedy:
-            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        else:
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(
-                sub, lg / ecfg.temperature).astype(jnp.int32)
-        draft_tokens.append(nxt)
-        draft_logits.append(lg)
-        tok = nxt[:, None]
+    if ecfg.stable_draft:
+        # every draft step re-feeds the growing prefix at the verify
+        # width q=γ+1 (garbage tail is causally masked), so draft and
+        # verify logits at shared positions see identical shapes and
+        # reduction orders — no scratch, no q=1 pass.
+        toks = jnp.concatenate(
+            [cur_tokens, jnp.zeros((cur_tokens.shape[0], gamma),
+                                   cur_tokens.dtype)], axis=1)
+        for i in range(gamma):
+            logits, _ = M.forward_decode(rt_d, params, toks, cache,
+                                         cache_view=draft_view)
+            lg = logits[:, i]
+            nxt, key = sample(lg, key)
+            draft_tokens.append(nxt)
+            draft_logits.append(lg)
+            toks = toks.at[:, i + 1].set(nxt)
+    else:
+        scratch = make_scratch(cfg, cache, gamma)
+        tok = cur_tokens
+        for i in range(gamma):
+            logits, upd = M.forward_decode(rt_d, params, tok, cache,
+                                           scratch=scratch,
+                                           scratch_len=jnp.int32(i),
+                                           cache_view=draft_view)
+            scratch = _scratch_write(scratch, upd, i)
+            lg = logits[:, -1]
+            nxt, key = sample(lg, key)
+            draft_tokens.append(nxt)
+            draft_logits.append(lg)
+            tok = nxt[:, None]
     draft_tokens = jnp.stack(draft_tokens, axis=1)        # (B,γ)
 
     # batched verification over [cur ++ drafts]
@@ -190,7 +233,8 @@ def spec_decode_step(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
     t_logits, t_upd = M.forward_decode(rt_t, params, ver_tokens, cache)
 
     if ecfg.greedy:
-        res = SP.greedy_accept(draft_tokens, t_logits)
+        res = SP.greedy_accept(draft_tokens, t_logits,
+                               tie_margin=ecfg.tie_margin)
     else:
         dprobs = jax.nn.softmax(
             jnp.stack(draft_logits, axis=1) / ecfg.temperature, axis=-1)
@@ -200,6 +244,30 @@ def spec_decode_step(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
 
     cache = commit(rt, cache, t_upd, res.n_accepted)
     return res, cache
+
+
+def chunk_prefill_step(rt: Runtime, params, cache: dict,
+                       tokens: jax.Array, valid: jax.Array
+                       ) -> tuple[jax.Array, dict]:
+    """One batched prefill chunk: q=C prompt tokens per row, appended at
+    each row's current ``length``.
+
+    ``tokens`` (B,C) holds each prefilling row's next chunk (zero-padded);
+    ``valid`` (B,) is the per-row count of real tokens (0 for rows riding
+    along). All rows share ONE compile bucket regardless of prompt length
+    or how many requests are prefilling — admission no longer compiles one
+    prefill per prompt length. Commits ``valid[b]`` tokens per row and
+    returns the logits at each row's last real token (the first generated
+    token once its prompt is exhausted). Rows with valid=0 commit one
+    garbage token into their masked stale region (paged: the trash block)
+    — the caller freezes their length and recurrent state.
+    """
+    rt_t = dataclasses.replace(rt, view="target" if rt.cass else "plain")
+    logits, upd = M.forward_decode(rt_t, params, tokens, cache)
+    n = jnp.maximum(valid.astype(jnp.int32), 1) - 1
+    cache = commit(rt, cache, upd, n)
+    last = jnp.take_along_axis(logits, n[:, None, None], axis=1)[:, 0]
+    return last, cache
 
 
 def autoregressive_step(rt: Runtime, params, cache: dict,

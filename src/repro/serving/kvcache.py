@@ -21,6 +21,19 @@ Cache layout (pytree; R = scan repeats of the layer group):
   cross (enc-dec) {"ck": (R,B,Senc,H,hd), "cv": …}  plain bf16 (computed once)
 
 plain store = bf16 array; packed store = {"spec": {...}, "verif": {...}}.
+
+Two cache layouts share the store codecs:
+
+* **slot** (``init_cache``) — every request owns a contiguous ``(S_max,)``
+  row: leaves are (R,B,S_max,…). Short requests strand the tail of their
+  row and S_max is a hard cap.
+* **paged** (``init_paged_cache``) — stores hold a global pool of
+  fixed-size token blocks, leaves (R,NB,BS,…), addressed through a
+  per-request ``block_table`` (B,MB) int32. The table is a *traced*
+  operand: admission, growth and recycling re-point rows with zero
+  recompiles. Physical block 0 is the trash block (see
+  ``serving.blockpool``); reads gather pool→per-request views, writes
+  scatter token positions through the table.
 """
 from __future__ import annotations
 
@@ -32,6 +45,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, layer_groups
 from repro.core import bitops, format as fmt
 from repro.core.format import CassandraConfig
+from repro.serving.blockpool import TRASH_BLOCK
 
 ONLINE_CORR_BITS = 8
 
@@ -141,6 +155,67 @@ def append_store_batched(store, new_store, at: jax.Array) -> dict:
     return jax.tree.map(upd, store, new_store)
 
 
+def is_paged(cache: dict) -> bool:
+    return "block_table" in cache
+
+
+def gather_block_leaf(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """(NB,BS,…) pool + (B,MB) table -> (B,MB*BS,…) request-major view.
+
+    The single paging-address primitive. ``gather_store`` applies it
+    leaf-wise to (possibly packed) stores; ``model._attn_entry`` applies
+    it to materialised dense prefixes so both the GQA (k/v) and MLA
+    (latent + rope) decode paths address the pool through the table. The
+    table is a *traced* operand — allocation, growth and recycling never
+    trigger a recompile; positions past a row's committed ``length`` are
+    stale pool data masked out by the attention validity prefix.
+    """
+    out = jnp.take(pool, table, axis=0, mode="clip")
+    return out.reshape(table.shape[0],
+                       table.shape[1] * pool.shape[1], *pool.shape[2:])
+
+
+def gather_store(store, table: jax.Array):
+    """Pool store (NB,BS,…) + table (B,MB) -> per-request store (B,MB*BS,…).
+
+    Works leaf-wise, so packed stores gather their spec/verif streams
+    without decoding; ``read_store`` on the result then reconstructs only
+    the requests' resident tokens.
+    """
+    if not is_packed(store):
+        return gather_block_leaf(store, table)
+    return jax.tree.map(lambda c: gather_block_leaf(c, table), store)
+
+
+def append_paged_batched(store, new_store, table: jax.Array,
+                         at: jax.Array) -> dict:
+    """Scatter per-row token runs into the block pool through the table.
+
+    ``store`` leaves (NB,BS,…); ``new_store`` leaves (B,q,…); row ``b``
+    writes its q tokens at logical positions ``at[b]+i``, resolved to
+    physical slots ``table[b, pos//BS]*BS + pos%BS``. Positions past a
+    row's table (masked rows riding along, chunk padding) are routed to
+    the trash block so they can never corrupt another request's blocks.
+    """
+    def upd(c, n):
+        nb, bs = c.shape[0], c.shape[1]
+        b, q = n.shape[0], n.shape[1]
+        mb = table.shape[1]
+        pos = at[:, None] + jnp.arange(q)[None, :]            # (B,q)
+        lblk = pos // bs
+        phys = jnp.take_along_axis(table, jnp.minimum(lblk, mb - 1),
+                                   axis=1)
+        phys = jnp.where(lblk < mb, phys, TRASH_BLOCK)
+        idx = phys * bs + pos % bs                            # (B,q)
+        flat = c.reshape(nb * bs, *c.shape[2:])
+        flat = flat.at[idx.reshape(-1)].set(
+            n.astype(c.dtype).reshape(b * q, *n.shape[2:]), mode="drop")
+        return flat.reshape(c.shape)
+    if not is_packed(store):
+        return upd(store, new_store)
+    return jax.tree.map(upd, store, new_store)
+
+
 # ---------------------------------------------------------------------------
 # Cache construction
 # ---------------------------------------------------------------------------
@@ -215,6 +290,15 @@ def cache_specs(cfg: ModelConfig, cass: CassandraConfig | None,
     return cache
 
 
+def _install_book(cache: dict, codebook) -> dict:
+    book = codebook or default_kv_codebook()
+    # pad exp_of_rank to 256 so specs stay shape-stable
+    eor = jnp.zeros(256, jnp.uint8).at[:book[0].shape[0]].set(book[0])
+    cache["book_exp_of_rank"] = eor
+    cache["book_rank_of_exp"] = book[1]
+    return cache
+
+
 def init_cache(cfg: ModelConfig, cass: CassandraConfig | None,
                b: int, s_max: int, packed: bool,
                codebook: tuple[jax.Array, jax.Array] | None = None) -> dict:
@@ -222,9 +306,63 @@ def init_cache(cfg: ModelConfig, cass: CassandraConfig | None,
     specs = cache_specs(cfg, cass, b, s_max, packed)
     cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
     if packed:
-        book = codebook or default_kv_codebook()
-        # pad exp_of_rank to 256 so specs stay shape-stable
-        eor = jnp.zeros(256, jnp.uint8).at[:book[0].shape[0]].set(book[0])
-        cache["book_exp_of_rank"] = eor
+        cache = _install_book(cache, codebook)
+    return cache
+
+
+def paged_cache_specs(cfg: ModelConfig, cass: CassandraConfig | None,
+                      b: int, num_blocks: int, block_size: int,
+                      max_blocks: int, packed: bool) -> dict:
+    """ShapeDtypeStruct pytree of a paged cache.
+
+    Attention stores become block pools (R,NB,BS,…) shared by all rows;
+    SSM state stays per-row (token-recurrent state has no token axis to
+    page). ``block_table`` (B,MB) maps each row's logical blocks to pool
+    blocks; ``length`` stays (B,).
+    """
+    if cfg.cross_attention:
+        raise NotImplementedError(
+            "paged caches do not support cross-attention stores yet")
+    book = (jax.ShapeDtypeStruct((256,), jnp.uint8),
+            jax.ShapeDtypeStruct((256,), jnp.uint8))
+
+    def stack(tree, r):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((r, *x.shape), x.dtype), tree)
+
+    cache: dict = {
+        "dec": [],
+        "length": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "block_table": jax.ShapeDtypeStruct((b, max_blocks), jnp.int32),
+    }
+    for g in layer_groups(cfg):
+        gdict = {}
+        for j, entry in enumerate(g.entries):
+            kind = _entry_kind(cfg, entry)
+            if kind == "ssm":
+                gdict[f"e{j}"] = _entry_struct(cfg, cass, kind, b, 0,
+                                               False, book)
+            else:
+                # pool: "batch"=NB blocks, "seq"=BS slots per block
+                gdict[f"e{j}"] = _entry_struct(cfg, cass, kind, num_blocks,
+                                               block_size, packed, book)
+        cache["dec"].append(stack(gdict, g.repeats))
+    if packed:
+        cache["book_exp_of_rank"] = book[0]
         cache["book_rank_of_exp"] = book[1]
+    return cache
+
+
+def init_paged_cache(cfg: ModelConfig, cass: CassandraConfig | None,
+                     b: int, num_blocks: int, block_size: int,
+                     max_blocks: int, packed: bool,
+                     codebook: tuple[jax.Array, jax.Array] | None = None
+                     ) -> dict:
+    """Allocate a zeroed paged cache; all table entries start at the trash
+    block (0)."""
+    specs = paged_cache_specs(cfg, cass, b, num_blocks, block_size,
+                              max_blocks, packed)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+    if packed:
+        cache = _install_book(cache, codebook)
     return cache

@@ -6,18 +6,23 @@ fixed-batch ``Engine.generate`` loop cannot admit or retire requests — the
 whole batch runs until the *slowest* row finishes. This scheduler
 multiplexes a request queue through the same jit'd ``spec_decode_step``:
 
-* **Slots** — a fixed (B, S_max) packed KV cache; each row is a slot. The
-  per-row ``length`` offsets already supported by ``commit`` /
-  ``forward_decode`` mean rows at different positions coexist in one step.
-* **Admission** — a queued request is prefilled into a fresh single-row
-  cache (one compile per prompt length) and the row is scattered into a
-  free slot with ``dynamic_update_slice`` (slot index is traced — no
-  recompile per slot).
-* **Decode** — one speculative cycle advances *all* occupied slots;
-  free/finished rows ride along with their cache length frozen so their
+* **Cache layouts** — ``paged=False``: a fixed (B, S_max) slot cache, one
+  contiguous row per request (short requests strand the row tail).
+  ``paged=True``: a global pool of fixed-size token blocks shared by all
+  rows, addressed through a per-row block table (``serving.blockpool``).
+  A request *reserves* its worst-case blocks at admission (no mid-flight
+  OOM) but blocks are allocated lazily as the sequence grows into them,
+  so resident memory tracks actual tokens, not the S_max bound.
+* **Admission** — chunked + batched: prompts prefill in fixed-size
+  ``chunk_size`` chunks through one shared compile bucket
+  (``chunk_prefill_step``); however many requests arrive, and whatever
+  their lengths, admission compiles exactly once. Rows mid-decode ride
+  along frozen during a prefill cycle (and vice versa).
+* **Decode** — one speculative cycle advances all prefilled rows;
+  frozen/free rows keep their length and recurrent state pinned so their
   state is inert until recycled.
-* **Retirement** — per-row early exit on EOS or ``max_new``; the slot is
-  freed immediately and the next queued request reuses its cache region.
+* **Retirement** — per-row early exit on EOS or ``max_new``; the slot (and
+  its blocks, when paged) is freed immediately for the next request.
 
 γ=0 / ``speculative=False`` degrades to continuous-batching autoregressive
 decode — the serving baseline for ``benchmarks/throughput.py``.
@@ -35,11 +40,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.format import CassandraConfig
-from repro.models import model as M
 from repro.models.layers import Runtime
 from repro.serving import kvcache as KC
+from repro.serving.blockpool import (BlockAllocator, TRASH_BLOCK,
+                                     blocks_needed)
 from repro.serving.engine import (EngineConfig, autoregressive_step,
-                                  spec_decode_step)
+                                  chunk_prefill_step, spec_decode_step)
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 
@@ -53,6 +59,8 @@ class Request:
     arrival: float = 0.0                # scheduler-clock cycle of arrival
     state: str = QUEUED
     slot: int = -1
+    pos: int = 0                        # prompt tokens prefilled so far
+    prefill_done: bool = False
     output: list = dataclasses.field(default_factory=list)
     admitted_at: float = -1.0
     finished_at: float = -1.0
@@ -62,42 +70,51 @@ class Request:
         return self.state == FINISHED
 
 
-def _install_row(cache: dict, row: dict, slot: jax.Array) -> dict:
-    """Scatter a prefilled single-row cache into batch index ``slot``.
+def _freeze_rows(cache0: dict, cache: dict, active: jax.Array) -> dict:
+    """Pin per-row live state of rows not active in this step.
 
-    ``slot`` is a traced int32 scalar, so one compile serves every slot —
-    the recycling path never triggers a retrace.
+    ``length`` and the SSM recurrent state (conv window + h) are per-row
+    *live* state that a masked step would otherwise clobber with garbage.
+    KV writes need no restore: a frozen row's scatter lands at positions
+    >= its pinned length — masked stale data in the slot layout, its own
+    stale region or the trash block in the paged layout.
     """
-    def put(c, n):
-        return jax.lax.dynamic_update_slice_in_dim(
-            c, n.astype(c.dtype), slot, axis=1)   # leaves are (R,B,…)
-
     out = dict(cache)
-    out["dec"] = jax.tree.map(put, cache["dec"], row["dec"])
-    if "cross" in cache:
-        out["cross"] = jax.tree.map(put, cache["cross"], row["cross"])
-    out["length"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["length"], row["length"].astype(cache["length"].dtype),
-        slot, axis=0)
+    out["length"] = jnp.where(active, cache["length"], cache0["length"])
+    new_dec = []
+    for g0, g1 in zip(cache0["dec"], cache["dec"]):
+        gd = dict(g1)
+        for ekey, e1 in g1.items():
+            if isinstance(e1, dict) and "conv" in e1:
+                e0 = g0[ekey]
+
+                def mask(old, new):
+                    act = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+                    return jnp.where(act, new, old)
+
+                gd[ekey] = {"conv": mask(e0["conv"], e1["conv"]),
+                            "h": mask(e0["h"], e1["h"])}
+        new_dec.append(gd)
+    out["dec"] = new_dec
     return out
 
 
 def _masked_spec(rt: Runtime, params, cache: dict, cur: jax.Array,
                  key: jax.Array, active: jax.Array, ecfg: EngineConfig):
-    """One speculative cycle; inactive rows keep their cache length frozen
-    (their K/V writes land in the masked stale region and stay inert)."""
-    length0 = cache["length"]
-    res, cache = spec_decode_step(rt, params, cache, cur, key, ecfg)
-    cache["length"] = jnp.where(active, cache["length"], length0)
-    return res, cache
+    res, new_cache = spec_decode_step(rt, params, cache, cur, key, ecfg)
+    return res, _freeze_rows(cache, new_cache, active)
 
 
 def _masked_auto(rt: Runtime, params, cache: dict, cur: jax.Array,
                  key: jax.Array, active: jax.Array):
-    length0 = cache["length"]
-    nxt, cache = autoregressive_step(rt, params, cache, cur, key)
-    cache["length"] = jnp.where(active, cache["length"], length0)
-    return nxt, cache
+    nxt, new_cache = autoregressive_step(rt, params, cache, cur, key)
+    return nxt, _freeze_rows(cache, new_cache, active)
+
+
+def _masked_chunk(rt: Runtime, params, cache: dict, tokens: jax.Array,
+                  valid: jax.Array):
+    last, new_cache = chunk_prefill_step(rt, params, cache, tokens, valid)
+    return last, _freeze_rows(cache, new_cache, valid > 0)
 
 
 class Scheduler:
@@ -108,7 +125,9 @@ class Scheduler:
                  ecfg: EngineConfig = EngineConfig(),
                  num_slots: int = 4, s_max: int = 256,
                  eos_id: int | None = None, speculative: bool = True,
-                 rt_extra: dict = {}):
+                 rt_extra: dict = {}, paged: bool = False,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 chunk_size: int = 32):
         if cfg.frontend:
             raise NotImplementedError(
                 "scheduler admission is token-prompt only for now")
@@ -116,50 +135,72 @@ class Scheduler:
         self.params = params
         self.num_slots, self.s_max = num_slots, s_max
         self.eos_id, self.speculative = eos_id, speculative
+        self.paged, self.block_size = paged, block_size
+        self.chunk_size = chunk_size
         self.rt = Runtime(cfg=cfg, cass=cass,
                           view="target" if cass else "plain", **rt_extra)
         packed = cass is not None
-        self.cache = KC.init_cache(cfg, cass, num_slots, s_max,
-                                   packed=packed)
-        self._prefill = jax.jit(
-            lambda p, b, c: M.forward_prefill(self.rt, p, b, c))
+        if paged:
+            self.max_blocks = blocks_needed(s_max, block_size)
+            # default pool: capacity-equivalent to the slot layout (+trash)
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else num_slots * self.max_blocks + 1)
+            self.cache = KC.init_paged_cache(
+                cfg, cass, num_slots, self.num_blocks, block_size,
+                self.max_blocks, packed=packed)
+            self.capacity = self.max_blocks * block_size
+        else:
+            self.cache = KC.init_cache(cfg, cass, num_slots, s_max,
+                                       packed=packed)
+            self.capacity = s_max
         self._spec = jax.jit(partial(_masked_spec, self.rt, ecfg=ecfg),
                              donate_argnums=(1,))
         self._auto = jax.jit(partial(_masked_auto, self.rt),
                              donate_argnums=(1,))
-        self._install = jax.jit(_install_row, donate_argnums=(0,))
-        self.slots: list[Request | None] = [None] * num_slots
+        self._chunk = jax.jit(partial(_masked_chunk, self.rt),
+                              donate_argnums=(1,))
+        self._reset_state()
+
+    def _reset_state(self) -> None:
+        self.slots: list[Request | None] = [None] * self.num_slots
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
-        self.cur = np.zeros((num_slots, 1), np.int32)   # last committed tok
+        self.lengths = np.zeros(self.num_slots, np.int64)
+        self.cur = np.zeros((self.num_slots, 1), np.int32)
         self.clock = 0.0                                # decode-cycle clock
         self.key = jax.random.PRNGKey(0)
-        self.stats = {"cycles": 0, "committed": 0, "accepted": 0,
-                      "drafted": 0, "admitted": 0, "finished": 0}
+        self.stats = {"cycles": 0, "prefill_cycles": 0, "committed": 0,
+                      "accepted": 0, "drafted": 0, "admitted": 0,
+                      "finished": 0, "peak_resident_tokens": 0,
+                      "peak_reserved_tokens": 0}
         self._next_rid = 0
+        if self.paged:
+            self.pool = BlockAllocator(self.num_blocks)
+            self.table = np.full((self.num_slots, self.max_blocks),
+                                 TRASH_BLOCK, np.int32)
 
     def reset(self) -> None:
         """Clear queue/slots/stats for a fresh run reusing the compiled
-        steps — admission overwrites a slot's entire cache row, so stale
-        cache contents from the previous run are harmless."""
-        self.slots = [None] * self.num_slots
-        self.queue.clear()
-        self.finished = []
-        self.cur[:] = 0
-        self.clock = 0.0
-        self.key = jax.random.PRNGKey(0)
-        self.stats = {k: 0 for k in self.stats}
-        self._next_rid = 0
+        steps — admission re-prefills over a slot's region (or re-points
+        its block table), so stale cache contents from the previous run
+        are harmless."""
+        self._reset_state()
 
     # -- queue -------------------------------------------------------------
 
     def submit(self, tokens, max_new: int, arrival: float = 0.0,
                rid: int | None = None) -> Request:
         tokens = np.asarray(tokens, np.int32).reshape(-1)
-        if len(tokens) + max_new + self.ecfg.gamma + 1 > self.s_max:
+        need = len(tokens) + max_new + self.ecfg.gamma + 1
+        if need > self.capacity:
             raise ValueError(
                 f"request needs {len(tokens)}+{max_new}+γ+1 cache slots, "
-                f"s_max={self.s_max}")
+                f"capacity={self.capacity}")
+        if self.paged and blocks_needed(
+                need, self.block_size) > self.pool.capacity:
+            raise ValueError(
+                f"request needs {blocks_needed(need, self.block_size)} "
+                f"blocks, pool has {self.pool.capacity}")
         req = Request(rid=self._next_rid if rid is None else rid,
                       tokens=tokens, max_new=max_new, arrival=arrival)
         self._next_rid = req.rid + 1
@@ -172,23 +213,28 @@ class Scheduler:
 
     # -- admission ---------------------------------------------------------
 
+    def _request_blocks(self, req: Request) -> int:
+        return blocks_needed(
+            len(req.tokens) + req.max_new + self.ecfg.gamma + 1,
+            self.block_size)
+
     def _admit(self, req: Request, slot: int) -> None:
-        row = KC.init_cache(self.cfg, self.cass, 1, self.s_max,
-                            packed=self.cass is not None)
-        batch = {"tokens": jnp.asarray(req.tokens)[None, :]}
-        logits, row = self._prefill(self.params, batch, row)
-        self.cache = self._install(self.cache, row, jnp.int32(slot))
-        first = int(jnp.argmax(logits[0, -1]))
         req.state, req.slot, req.admitted_at = RUNNING, slot, self.clock
-        req.output = [first]
+        req.pos, req.prefill_done, req.output = 0, False, []
         self.slots[slot] = req
-        self.cur[slot, 0] = first
+        self.lengths[slot] = 0
+        if self.paged:
+            # reservations are keyed by slot, not rid: slots are unique
+            # while occupied, whereas callers may reuse rids
+            self.pool.reserve(slot, self._request_blocks(req))
+            self.table[slot, :] = TRASH_BLOCK
         self.stats["admitted"] += 1
-        self._maybe_retire(req)
 
     def _admit_ready(self) -> None:
         """FIFO among *ready* requests — a future arrival queued ahead
-        must not head-of-line-block one that is already due."""
+        must not head-of-line-block one that is already due. When paged,
+        the head-of-line request also gates on pool reservation; it waits
+        (rather than being skipped) so small requests cannot starve it."""
         for slot in range(self.num_slots):
             if self.slots[slot] is not None:
                 continue
@@ -197,6 +243,9 @@ class Scheduler:
             if idx is None:
                 break
             req = self.queue[idx]
+            if self.paged and not self.pool.can_reserve(
+                    self._request_blocks(req)):
+                break
             del self.queue[idx]
             self._admit(req, slot)
 
@@ -213,15 +262,84 @@ class Scheduler:
             return
         req.state, req.finished_at = FINISHED, self.clock
         self.slots[req.slot] = None
+        if self.paged:
+            self.pool.release(req.slot)
+            self.table[req.slot, :] = TRASH_BLOCK
         self.finished.append(req)
         self.stats["finished"] += 1
+
+    # -- device-state sync ---------------------------------------------------
+
+    def _grow_blocks(self, req: Request, n_tokens: int) -> None:
+        """Allocate pool blocks until ``req`` covers ``n_tokens`` and map
+        them into its table row (within its admission reservation)."""
+        self.pool.grow_to(req.slot, n_tokens, self.block_size)
+        blocks = self.pool.blocks_of(req.slot)
+        self.table[req.slot, :len(blocks)] = blocks
+
+    def _push_host_state(self) -> None:
+        self.cache["length"] = jnp.asarray(self.lengths, jnp.int32)
+        if self.paged:
+            self.cache["block_table"] = jnp.asarray(self.table)
+
+    def _track_residency(self) -> None:
+        resident = int(sum(self.lengths[r.slot] for r in self.slots
+                           if r is not None))
+        self.stats["peak_resident_tokens"] = max(
+            self.stats["peak_resident_tokens"], resident)
+        if self.paged:
+            # reserved (not merely allocated) blocks are the honest
+            # memory-held figure: a reservation is unusable by anyone else
+            reserved = self.pool.reserved_total * self.block_size
+        else:
+            reserved = sum(r is not None for r in self.slots) * self.s_max
+        self.stats["peak_reserved_tokens"] = max(
+            self.stats["peak_reserved_tokens"], reserved)
+
+    # -- prefill -----------------------------------------------------------
+
+    def _prefill_cycle(self, prefilling: list[Request]) -> None:
+        """One chunk of every prefilling row, batched in one bucket."""
+        c = self.chunk_size
+        tokens = np.zeros((self.num_slots, c), np.int32)
+        valid = np.zeros(self.num_slots, np.int32)
+        for r in prefilling:
+            v = min(c, len(r.tokens) - r.pos)
+            tokens[r.slot, :v] = r.tokens[r.pos:r.pos + v]
+            valid[r.slot] = v
+            if self.paged:
+                self._grow_blocks(r, r.pos + v)
+        self._push_host_state()
+        last, self.cache = self._chunk(self.params, self.cache,
+                                       jnp.asarray(tokens),
+                                       jnp.asarray(valid))
+        last = np.asarray(last)
+        for r in prefilling:
+            r.pos += int(valid[r.slot])
+            self.lengths[r.slot] += int(valid[r.slot])
+            if r.pos >= len(r.tokens):
+                first = int(np.argmax(last[r.slot]))
+                r.prefill_done = True
+                r.output = [first]
+                self.cur[r.slot, 0] = first
+                self._maybe_retire(r)
+        self.stats["prefill_cycles"] += 1
 
     # -- decode ------------------------------------------------------------
 
     def step(self) -> bool:
-        """Admit what's ready, run one decode cycle. Returns False when
-        there was nothing to do (idle or all arrivals in the future)."""
+        """Admit what's ready, run one prefill-chunk or decode cycle.
+        Returns False when there was nothing to do (idle or all arrivals
+        in the future)."""
         self._admit_ready()
+        prefilling = [r for r in self.slots
+                      if r is not None and not r.prefill_done]
+        if prefilling:
+            self._prefill_cycle(prefilling)
+            self._track_residency()
+            self.stats["cycles"] += 1
+            self.clock += 1.0
+            return True
         active = np.array([r is not None for r in self.slots])
         if not active.any():
             if self.queue:                  # fast-forward to next arrival
@@ -229,6 +347,12 @@ class Scheduler:
                                  min(r.arrival for r in self.queue))
                 return True
             return False
+        horizon = (self.ecfg.gamma + 1) if self.speculative else 1
+        if self.paged:
+            for slot in np.flatnonzero(active):
+                self._grow_blocks(self.slots[slot],
+                                  int(self.lengths[slot]) + horizon)
+        self._push_host_state()
         self.key, sub = jax.random.split(self.key)
         cur = jnp.asarray(self.cur)
         act = jnp.asarray(active)
@@ -252,10 +376,12 @@ class Scheduler:
             req = self.slots[slot]
             before = len(req.output)
             req.output.extend(tokens[slot][valid[slot]].tolist())
+            self.lengths[slot] += int(n[slot]) + 1
             self.cur[slot, 0] = nxt[slot]
             self._maybe_retire(req)
             # delivered tokens only: retirement truncates past EOS/max_new
             self.stats["committed"] += len(req.output) - before
+        self._track_residency()
         self.stats["cycles"] += 1
         self.clock += 1.0
         return True
@@ -278,4 +404,8 @@ class Scheduler:
         if self.finished:
             lat = [r.finished_at - r.arrival for r in self.finished]
             s["mean_latency_cycles"] = float(np.mean(lat))
+        if self.paged:
+            s["pool_blocks"] = self.pool.capacity
+            s["pool_high_water_blocks"] = self.pool.high_water
+            s["block_size"] = self.block_size
         return s

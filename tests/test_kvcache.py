@@ -1,0 +1,200 @@
+"""Paged KV cache: block-allocator invariants and bit-exact packed-store
+round-trips through a block table.
+
+Each property has a shared checker driven two ways: hypothesis explores
+arbitrary traffic when it is installed (CI), and a deterministic seeded
+sweep always runs so the invariants are exercised even without it.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.format import CassandraConfig
+from repro.serving import kvcache as KC
+from repro.serving.blockpool import (BlockAllocator, TRASH_BLOCK,
+                                     blocks_needed)
+
+jax.config.update("jax_platform_name", "cpu")
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Allocator properties
+# ---------------------------------------------------------------------------
+
+def _random_ops(rng, n):
+    kinds = ["admit", "grow", "retire"]
+    return [(kinds[rng.integers(3)], int(rng.integers(8)))
+            for _ in range(n)]
+
+
+def _check_alloc_trace(num_blocks, ops):
+    """Arbitrary admit/grow/retire traffic: no block is ever live twice,
+    the free list conserves blocks, reservations bound allocations, and
+    the trash block is never handed out."""
+    pool = BlockAllocator(num_blocks)
+    live: list[int] = []
+    reserved: dict[int, int] = {}
+    next_owner = 0
+    for kind, v in ops:
+        if kind == "admit":
+            need = v % 4 + 1
+            if pool.can_reserve(need):
+                pool.reserve(next_owner, need)
+                reserved[next_owner] = need
+                live.append(next_owner)
+                next_owner += 1
+            else:
+                with pytest.raises(ValueError):
+                    pool.reserve(next_owner, need)
+        elif kind == "grow" and live:
+            owner = live[v % len(live)]
+            if len(pool.blocks_of(owner)) < reserved[owner]:
+                blk = pool.alloc(owner)
+                assert blk != TRASH_BLOCK
+        elif kind == "retire" and live:
+            owner = live.pop(v % len(live))
+            blocks = pool.release(owner)
+            assert len(set(blocks)) == len(blocks)
+            del reserved[owner]
+        pool.check_invariants()
+    # full drain returns the pool to pristine capacity
+    for owner in list(live):
+        pool.release(owner)
+    pool.check_invariants()
+    assert pool.allocated_total == 0 and pool.reserved_total == 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_allocator_trace_seeded(seed):
+    rng = np.random.default_rng(seed)
+    _check_alloc_trace(int(rng.integers(2, 25)), _random_ops(rng, 60))
+
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.tuples(st.sampled_from(["admit", "grow", "retire"]),
+                  st.integers(0, 7)),
+        min_size=1, max_size=60)
+
+    @needs_hypothesis
+    @given(st.integers(2, 24), OPS)
+    @settings(**SETTINGS)
+    def test_allocator_trace_property(num_blocks, ops):
+        _check_alloc_trace(num_blocks, ops)
+
+    @needs_hypothesis
+    @given(st.integers(1, 65), st.integers(1, 32))
+    @settings(**SETTINGS)
+    def test_blocks_needed_covers_tokens(n_tokens, block_size):
+        n = blocks_needed(n_tokens, block_size)
+        assert n * block_size >= n_tokens
+        assert (n - 1) * block_size < n_tokens
+
+
+def test_allocator_basics():
+    pool = BlockAllocator(5)
+    assert pool.capacity == 4
+    pool.reserve("a", 2)
+    pool.reserve("b", 2)
+    assert not pool.can_reserve(1)
+    b1, b2 = pool.alloc("a"), pool.alloc("a")
+    assert b1 != b2 and TRASH_BLOCK not in (b1, b2)
+    with pytest.raises(ValueError):
+        pool.alloc("a")                       # reservation exhausted
+    assert pool.high_water == 2
+    assert set(pool.release("a")) == {b1, b2}
+    pool.check_invariants()
+    assert pool.can_reserve(2)
+
+
+# ---------------------------------------------------------------------------
+# Paged store round-trips
+# ---------------------------------------------------------------------------
+
+D, HKV, BS, NB, MB, B = 32, 2, 4, 9, 3, 2
+CASS = CassandraConfig(variant=1, gamma=3)
+BOOK = KC.default_kv_codebook()
+# disjoint tables: row b owns blocks [1+b*MB, 1+(b+1)*MB)
+TABLE = jnp.asarray(
+    [[1 + b * MB + i for i in range(MB)] for b in range(B)], jnp.int32)
+
+
+def _encode(x):
+    return KC.encode_store(CASS, x, D, BOOK)
+
+
+def _empty_pool():
+    return jax.tree.map(
+        lambda l: jnp.zeros(l.shape, l.dtype),
+        jax.eval_shape(_encode, jax.ShapeDtypeStruct(
+            (NB, BS, HKV, D), jnp.bfloat16)))
+
+
+def _check_packed_roundtrip(seed, offset):
+    """Tokens scattered into a packed pool through a block table and
+    gathered back reconstruct bit-exactly what a direct encode/decode
+    yields — paging is lossless by construction."""
+    key = jax.random.PRNGKey(seed)
+    q = 3
+    x = jax.random.normal(key, (B, q, HKV, D), jnp.float32) \
+        .astype(jnp.bfloat16)
+    at = jnp.full((B,), offset, jnp.int32)
+    pool = KC.append_paged_batched(_empty_pool(), _encode(x), TABLE, at)
+    view = KC.gather_store(pool, TABLE)          # (B, MB*BS, HKV, …)
+    for v in ("target", "draft"):
+        got = KC.read_store(CASS, view, D, v, BOOK)
+        want = KC.read_store(CASS, _encode(x), D, v, BOOK)
+        for b in range(B):
+            np.testing.assert_array_equal(
+                np.asarray(got[b, offset:offset + q], np.float32),
+                np.asarray(want[b], np.float32))
+
+
+@pytest.mark.parametrize("offset", range(BS))
+def test_packed_roundtrip_through_block_table(offset):
+    _check_packed_roundtrip(7 * offset + 1, offset)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(0, BS - 1))
+    @settings(**SETTINGS)
+    def test_packed_roundtrip_property(seed, offset):
+        _check_packed_roundtrip(seed, offset)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_plain_roundtrip_and_trash_isolation(seed):
+    """Plain bf16 pool: a row writing past its table (trash-routed) must
+    not disturb another row's blocks."""
+    key = jax.random.PRNGKey(seed)
+    q = BS * MB  # row 1 writes its whole capacity … and then some
+    x = jax.random.normal(key, (B, q, HKV, D), jnp.bfloat16)
+    pool = jnp.zeros((NB, BS, HKV, D), jnp.bfloat16)
+    pool = KC.append_paged_batched(pool, x, TABLE, jnp.zeros(B, jnp.int32))
+    # row 1 overflows: positions beyond MB*BS go to the trash block
+    over = KC.append_paged_batched(
+        pool, x, TABLE, jnp.asarray([0, BS], jnp.int32))
+    view = KC.gather_store(over, TABLE)
+    # row 0 rewrote [0,q); row 1 wrote [BS, MB*BS) in-range, rest trashed
+    np.testing.assert_array_equal(np.asarray(view[0], np.float32),
+                                  np.asarray(x[0], np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(view[1, BS:], np.float32),
+        np.asarray(x[1, :q - BS], np.float32))
+    # row 0's blocks were never touched by row 1's overflow
+    np.testing.assert_array_equal(
+        np.asarray(KC.gather_store(pool, TABLE)[0], np.float32),
+        np.asarray(view[0], np.float32))

@@ -41,21 +41,59 @@ def test_lossless_vs_autoregressive(arch):
 
 
 @pytest.mark.slow
-def test_identity_draft_near_full_acceptance():
-    """No compression -> draft net == target net -> acceptance ≈ 1.0.
+def test_identity_draft_exact_acceptance():
+    """No compression -> draft net == target net -> acceptance == 1.0.
 
-    Not exactly 1.0: the γ sequential q=1 draft passes and the batched
-    q=γ+1 verify pass reduce in different orders, so logits differ by
-    ~1e-2 and near-tie argmaxes occasionally flip. Losslessness does not
-    depend on this (the verify pass corrects every flip); the floor pins
-    that the draft view really reconstructs the same network.
+    Audit of the former ≈0.9 (ROADMAP known issue) found two sources:
+    (a) the γ sequential q=1 draft passes and the batched q=γ+1 verify
+    pass reduce in different orders — removed by the shape-stable draft
+    (``EngineConfig.stable_draft``), which runs every draft step at the
+    verify width so shared positions see identical shapes; and (b) the
+    draft view of the packed KV cache decodes delta-mode exponent
+    superblocks approximately (their corrections live in verification
+    data by design), a ~1e-2 logit gap that still flips near-tie argmaxes
+    of a random-init model. The tie-margin rule accepts those known
+    noise-scale ties, making identity acceptance exact. The strict
+    ``tie_margin=0`` default stays the lossless Table III rule
+    (test_lossless_vs_autoregressive).
     """
     cfg = get_config("llama3-8b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
     cass = CassandraConfig(variant=1, gamma=3, weight_prune=0.0,
                            kv_prune=0.0, weight_trunc=0, kv_trunc=0)
-    _, stats = _gen(cfg, format_params(params, cass), cass)
-    assert stats["acceptance"] >= 0.75
+    packed = format_params(params, cass)
+    eng = Engine(cfg, packed, cass=cass,
+                 ecfg=EngineConfig(gamma=3, stable_draft=True,
+                                   tie_margin=0.05),
+                 rt_extra={"ssm_chunk": 8})
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 16),
+                                           0, cfg.vocab_size)}
+    _, stats = eng.generate(prompt, max_new=10)
+    assert stats["acceptance"] == 1.0
+    # the default (strict, q=1-draft) config keeps a high floor — guards
+    # the production path's draft/verify agreement, which the exact check
+    # above would miss if it collapsed
+    _, strict = _gen(cfg, packed, cass)
+    assert strict["acceptance"] >= 0.75
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["llama3-8b", "jamba-v0.1-52b"])
+def test_plain_stable_draft_bitwise_acceptance(arch):
+    """Plain (uncompressed) cache + shape-stable draft: the draft pass is
+    the verify computation restricted to earlier positions — bitwise
+    equal logits, acceptance exactly 1.0 with the *strict* greedy rule.
+    Covers the SSM hybrid too: stable mode re-feeds the prefix from the
+    committed recurrent state instead of carrying a draft scratch."""
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, cass=None,
+                 ecfg=EngineConfig(gamma=3, stable_draft=True),
+                 rt_extra={"ssm_chunk": 8})
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                           0, cfg.vocab_size)}
+    _, stats = eng.generate(prompt, max_new=16)
+    assert stats["acceptance"] == 1.0
 
 
 def test_greedy_accept_prefix_rule():
