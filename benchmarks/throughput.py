@@ -1,10 +1,17 @@
-"""Continuous-batching serving throughput: speculative vs autoregressive.
+"""Continuous-batching serving throughput: fused vs alternating vs AR.
 
-Replays the same request trace through the scheduler twice — Cassandra-1
-speculative decode vs the bf16 autoregressive baseline — at arrival rates
+Replays the same request trace through the scheduler three ways — the
+fused mixed-role serving step (``unified_step``; admission piggybacks on
+decode cycles), the alternating prefill/decode scheduler (the PR 2
+reference), and the bf16 autoregressive baseline — at arrival rates
 λ ∈ {1, 4, 16} requests per decode cycle (request i arrives at cycle i/λ;
-λ=16 is effectively a burst). Reports tokens/s (wall), tokens-per-cycle,
-acceptance, and mean latency in cycles, as a JSON report.
+λ=16 is effectively a burst). Each row reports tokens/s (wall),
+tokens-per-cycle, acceptance, TTFT, and p50/p95 inter-token latency in
+cycles, as a JSON report.
+
+``--fused-gate`` turns the fused-vs-alternating comparison into a hard
+gate (nightly CI): at every λ ≥ 4 the fused scheduler must improve p95
+inter-token latency without reducing aggregate throughput.
 
 ``--paged`` additionally replays a mixed-prompt-length trace through the
 slot layout and the paged (block-pool) layout and reports KV residency:
@@ -15,7 +22,8 @@ reserves per-request blocks, so mixed lengths fit ≥1.5× more resident
 tokens at equal memory.
 
   PYTHONPATH=src python benchmarks/throughput.py [--trained] \
-      [--rates 1,4,16] [--paged] [--out /tmp/throughput.json]
+      [--rates 1,4,16] [--fused-gate] [--paged] \
+      [--out /tmp/throughput.json]
 """
 import argparse
 import json
@@ -37,10 +45,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks import common  # noqa: E402
 
 
-def run_trace(sched: Scheduler, prompts, max_new: int, lam: float) -> dict:
+def run_trace(sched: Scheduler, prompts, max_new, lam: float
+              ) -> tuple[dict, list]:
+    if isinstance(max_new, int):
+        max_new = [max_new] * len(prompts)
     sched.reset()
-    for i, p in enumerate(prompts):
-        sched.submit(p, max_new=max_new, arrival=i / lam)
+    reqs = [sched.submit(p, max_new=mn, arrival=i / lam)
+            for i, (p, mn) in enumerate(zip(prompts, max_new))]
     t0 = time.time()
     done = sched.run()
     dt = time.time() - t0
@@ -48,7 +59,44 @@ def run_trace(sched: Scheduler, prompts, max_new: int, lam: float) -> dict:
     s["wall_s"] = dt
     s["tokens_per_s"] = s["committed"] / max(dt, 1e-9)
     s["completed"] = len(done)
-    return s
+    return s, [r.output for r in reqs]
+
+
+def check_fused_gate(report: dict) -> list:
+    """Fused must beat alternating where it claims to: at every λ ≥ 4,
+    better p95 inter-token latency (ties broken by the mean) at no
+    aggregate-throughput cost. Tokens/cycle is the throughput gate: it is
+    deterministic, and a fused cycle costs the same device work as an
+    alternating decode cycle (γ drafts + one γ+1-wide pass), so fewer
+    cycles at equal per-cycle cost IS aggregate tokens/s. Wall tokens/s
+    swings ±40% between identical runs on shared runners, so it only
+    guards against catastrophic (>2x) regressions."""
+    failures = []
+    rows = {(r["mode"], r["lambda"]): r for r in report["runs"]}
+    for (mode, lam), f in rows.items():
+        if mode != "fused" or lam < 4:
+            continue
+        a = rows.get(("alternating", lam))
+        if a is None:
+            continue
+        itl_better = (f["itl_cycles_p95"] < a["itl_cycles_p95"]
+                      or (f["itl_cycles_p95"] == a["itl_cycles_p95"]
+                          and f["itl_cycles_mean"] < a["itl_cycles_mean"]))
+        if not itl_better:
+            failures.append(
+                f"λ={lam}: fused p95 ITL {f['itl_cycles_p95']:.2f}cyc "
+                f"(mean {f['itl_cycles_mean']:.3f}) is not better than "
+                f"alternating {a['itl_cycles_p95']:.2f}cyc "
+                f"(mean {a['itl_cycles_mean']:.3f})")
+        if f["tokens_per_cycle"] < 0.99 * a["tokens_per_cycle"]:
+            failures.append(
+                f"λ={lam}: fused tokens/cycle {f['tokens_per_cycle']:.3f} "
+                f"< alternating {a['tokens_per_cycle']:.3f}")
+        if f["tokens_per_s"] < 0.5 * a["tokens_per_s"]:
+            failures.append(
+                f"λ={lam}: fused tokens/s {f['tokens_per_s']:.1f} fell "
+                f">2x below alternating {a['tokens_per_s']:.1f}")
+    return failures
 
 
 def _kv_bytes_per_token(sched: Scheduler) -> float:
@@ -87,6 +135,7 @@ def run_paged_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
         t0 = time.time()
         sched.run()
         s = sched.summary()
+        s["fused"] = sched.fused
         bpt = _kv_bytes_per_token(sched)
         held_mb = s["peak_reserved_tokens"] * bpt / 1e6
         s["wall_s"] = time.time() - t0
@@ -127,6 +176,13 @@ def main(argv=None):
     ap.add_argument("--gamma", type=int, default=3)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--rates", default="1,4,16")
+    ap.add_argument("--fused-gate", action="store_true",
+                    help="fail the run unless the fused scheduler beats "
+                    "alternating on p95 inter-token latency at λ>=4 "
+                    "without losing aggregate throughput (nightly gate)")
+    ap.add_argument("--max-prefill-tokens-per-step", type=int, default=None,
+                    help="fused mode: cap prefill tokens per cycle so "
+                    "admission bursts can't monopolise a cycle's compute")
     ap.add_argument("--paged", action="store_true",
                     help="also compare slot vs paged KV residency on a "
                     "mixed-length trace (lossless paging check)")
@@ -154,48 +210,93 @@ def main(argv=None):
               else common.calibrated_format(cfg, params, cass,
                                             calibrate=False))
 
+    # a serving-shaped trace: mixed prompt lengths and output budgets so
+    # retirement desynchronises and admission overlaps live decode — the
+    # regime the fused step exists for (uniform requests retire in
+    # lock-step, leaving nothing to piggyback admission on)
     key = jax.random.PRNGKey(args.seed + 1)
+    lens = [max(4, args.prompt_len * f // 4) for f in (4, 2, 3, 6)]
+    max_news = [max(4, args.max_new * f // 4) for f in (4, 6, 3, 5)]
     prompts = [np.asarray(jax.random.randint(
-        jax.random.fold_in(key, i), (args.prompt_len,), 0, cfg.vocab_size))
-        for i in range(args.requests)]
-    s_max = args.prompt_len + args.max_new + args.gamma + 1
+        jax.random.fold_in(key, i), (lens[i % len(lens)],), 0,
+        cfg.vocab_size)) for i in range(args.requests)]
+    req_max_new = [max_news[i % len(max_news)]
+                   for i in range(args.requests)]
+    s_max = max(lens) + max(max_news) + args.gamma + 1
     rt_extra = {"ssm_chunk": 8}
 
+    ecfg = EngineConfig(gamma=args.gamma)
     scheds = {
-        "speculative": Scheduler(cfg, packed, cass=cass,
-                                 ecfg=EngineConfig(gamma=args.gamma),
+        "fused": Scheduler(cfg, packed, cass=cass, ecfg=ecfg,
+                           num_slots=args.slots, s_max=s_max,
+                           rt_extra=rt_extra, fused=True,
+                           max_prefill_tokens_per_step=(
+                               args.max_prefill_tokens_per_step)),
+        "alternating": Scheduler(cfg, packed, cass=cass, ecfg=ecfg,
                                  num_slots=args.slots, s_max=s_max,
-                                 rt_extra=rt_extra),
-        "autoregressive": Scheduler(cfg, params, cass=None,
-                                    ecfg=EngineConfig(gamma=args.gamma),
+                                 rt_extra=rt_extra, fused=False),
+        "autoregressive": Scheduler(cfg, params, cass=None, ecfg=ecfg,
                                     num_slots=args.slots, s_max=s_max,
                                     speculative=False, rt_extra=rt_extra),
     }
     report = {"arch": args.arch, "requests": args.requests,
               "slots": args.slots, "max_new": args.max_new,
               "gamma": args.gamma, "trained": args.trained, "runs": []}
+    outputs: dict = {}
     for mode, sched in scheds.items():
         # warm the compile cache so per-λ walls compare decode, not trace
         run_trace(sched, prompts[:2], max_new=4, lam=rates[0])
         for lam in rates:
-            s = run_trace(sched, prompts, max_new=args.max_new, lam=lam)
+            s, outs = run_trace(sched, prompts, max_new=req_max_new,
+                                lam=lam)
+            outputs[(mode, lam)] = outs
             row = {"mode": mode, "lambda": lam, **s}
             report["runs"].append(row)
             print(f"[{mode:>14}] λ={lam:<4g} tokens/s={s['tokens_per_s']:8.1f}"
                   f"  tokens/cycle={s['tokens_per_cycle']:5.2f}"
                   f"  cycles={s['cycles']:4d}"
-                  f"  latency={s.get('mean_latency_cycles', 0):6.1f}cyc"
+                  f"  ttft_p95={s.get('ttft_cycles_p95', 0):5.1f}cyc"
+                  f"  itl_p95={s.get('itl_cycles_p95', 0):4.1f}cyc"
                   f"  acceptance={s['acceptance']}")
+        # one fused compile bucket must serve the whole λ sweep: every
+        # admission/growth/retirement mix, with zero post-warmup recompiles
+        if mode == "fused":
+            report["fused_unified_traces"] = sched.trace_counts.get(
+                "unified", 0)
+    # the fused step commits the same per-request tokens as the
+    # alternating reference (chunk-width near-ties aside, see tests for
+    # the strict equal-width identity check) — report it per λ
+    report["fused_outputs_identical"] = {
+        str(lam): outputs[("fused", lam)] == outputs[("alternating", lam)]
+        for lam in rates}
     if args.paged:
         report["paged_compare"] = run_paged_compare(
-            cfg, packed, cass, EngineConfig(gamma=args.gamma), args,
-            rt_extra)
-    spec = [r for r in report["runs"] if r["mode"] == "speculative"]
-    auto = [r for r in report["runs"] if r["mode"] == "autoregressive"]
-    for s, a in zip(spec, auto):
-        print(f"λ={s['lambda']:<4g} speculative is "
-              f"{s['tokens_per_cycle'] / max(a['tokens_per_cycle'], 1e-9):.2f}x"
-              f" tokens/cycle vs autoregressive")
+            cfg, packed, cass, ecfg, args, rt_extra)
+    byl = {(r["mode"], r["lambda"]): r for r in report["runs"]}
+    for lam in rates:
+        f, a, ar = (byl[("fused", lam)], byl[("alternating", lam)],
+                    byl[("autoregressive", lam)])
+        print(f"λ={lam:<4g} fused vs alternating: "
+              f"{f['tokens_per_cycle'] / max(a['tokens_per_cycle'], 1e-9):.2f}x"
+              f" tokens/cycle, itl_p95 {a.get('itl_cycles_p95', 0):.1f}→"
+              f"{f.get('itl_cycles_p95', 0):.1f}cyc, ttft_p95 "
+              f"{a.get('ttft_cycles_p95', 0):.1f}→"
+              f"{f.get('ttft_cycles_p95', 0):.1f}cyc "
+              f"(spec vs AR: "
+              f"{f['tokens_per_cycle'] / max(ar['tokens_per_cycle'], 1e-9):.2f}x"
+              f" tokens/cycle)")
+    failures = check_fused_gate(report)
+    if report["fused_unified_traces"] != 1:
+        failures.append(
+            f"fused step traced {report['fused_unified_traces']}x across "
+            "the sweep — the one-compile-bucket contract is broken")
+    report["fused_gate"] = {"checked": args.fused_gate,
+                            "failures": failures}
+    for msg in failures:
+        print(f"[fused-gate] FAIL: {msg}")
+    if not failures:
+        print("[fused-gate] fused beats alternating on p95 ITL at λ>=4 "
+              "at no aggregate-throughput cost")
     out = json.dumps(report, indent=2)
     if args.out:
         with open(args.out, "w") as f:
@@ -204,6 +305,8 @@ def main(argv=None):
     else:
         print(out)
     if args.paged and not report["paged_compare"]["passed"]:
+        raise SystemExit(1)
+    if args.fused_gate and failures:
         raise SystemExit(1)
     return report
 

@@ -4,8 +4,11 @@ continuous-batching scheduler on a briefly-trained model (the paper's
 instantaneous batch, lossless speculative speedup).
 
 Eight requests are admitted into four cache slots; as each request hits
-``max_new`` its slot is recycled by the next queued request, so the whole
-queue drains without ever recompiling or growing the cache.
+``max_new`` (or one of its own per-request stop tokens — see
+``--stop-probe``) its slot is recycled by the next queued request, so the
+whole queue drains without ever recompiling or growing the cache. The
+scheduler runs the fused serving step: staggered admissions ride the
+resident requests' decode cycles instead of stalling them.
 
   PYTHONPATH=src python examples/serve_reasoning.py [--arch llama3-8b]
 """
@@ -33,6 +36,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--gamma", type=int, default=5)
     ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--no-stop-probe", dest="stop_probe",
+                    action="store_false", default=True,
+                    help="skip the stop-token demo (by default a probe "
+                    "run finds each odd request's 8th generated token "
+                    "and hands it back as that request's per-request "
+                    "stop condition, retiring it early)")
     args = ap.parse_args()
 
     print(f"[1/3] training smoke {args.arch} on the synthetic corpus …")
@@ -50,23 +59,47 @@ def main():
                       num_slots=args.slots, s_max=s_max,
                       rt_extra={"ssm_chunk": 8})
     prompts = common.eval_prompts(cfg, n=args.requests)["tokens"]
+    stops = {}
+    if args.stop_probe:
+        # probe: generate the odd requests once, then hand each its own
+        # 8th token back as a per-request stop condition — on the real
+        # run each stops exactly there (the scheduler is deterministic)
+        # while the even requests run to max_new
+        odd = list(range(1, args.requests, 2))
+        probes = [sched.submit(np.asarray(prompts[i])[:args.prompt_len],
+                               max_new=args.max_new) for i in odd]
+        sched.run()
+        stops = {i: [p.output[min(7, len(p.output) - 1)]]
+                 for i, p in zip(odd, probes)}
+        sched.reset()
     t0 = time.time()
     for i in range(args.requests):
         sched.submit(np.asarray(prompts[i])[:args.prompt_len],
-                     max_new=args.max_new)
+                     max_new=args.max_new,
+                     stop_tokens=stops.get(i))
     done = sched.run()
     dt = time.time() - t0
 
     assert len(done) == args.requests, "every request must complete"
     for r in done:
-        assert len(r.output) == args.max_new, \
-            f"req {r.rid}: {len(r.output)} != {args.max_new}"
+        if r.stop_tokens:
+            assert len(r.output) <= args.max_new
+            assert r.output[-1] in r.stop_tokens or \
+                len(r.output) == args.max_new
+        else:
+            assert len(r.output) == args.max_new, \
+                f"req {r.rid}: {len(r.output)} != {args.max_new}"
     s = sched.summary()
     alpha = s["acceptance"]
-    print(f"\n{len(done)} requests complete, {args.max_new} tokens each — "
+    stopped = sum(1 for r in done if r.stop_tokens
+                  and len(r.output) < args.max_new)
+    print(f"\n{len(done)} requests complete "
+          f"({stopped} retired early on their own stop tokens) — "
           f"cycles={s['cycles']}  acceptance={alpha:.3f}  "
           f"tokens/cycle={s['tokens_per_cycle']:.2f}  "
           f"mean latency={s['mean_latency_cycles']:.1f} cycles  "
+          f"ttft p95={s.get('ttft_cycles_p95', 0):.1f}cyc  "
+          f"itl p95={s.get('itl_cycles_p95', 0):.1f}cyc  "
           f"wall={dt:.1f}s")
     print(f"bandwidth-model speedup at this acceptance "
           f"(c=0.33): {speedup_model(alpha, args.gamma, 0.33):.2f}x vs bf16")

@@ -8,12 +8,21 @@ cycles, acceptance rate and the bandwidth-model speedup estimate.
 
 ``--scheduler`` serves the same requests through the continuous-batching
 scheduler instead of the fixed-batch engine: requests are admitted into
-``--slots`` cache rows via chunked batched prefill (one compile bucket
-for all prompt lengths), finish independently, and free slots are
-recycled by the queue:
+``--slots`` cache rows, finish independently, and free slots are
+recycled by the queue. By default the scheduler runs the FUSED serving
+step: each cycle carries prefill-chunk rows and speculative-decode rows
+in the same batch (one compile bucket), so admission rides decode cycles
+instead of stalling them; ``--max-prefill-tokens-per-step`` caps how
+much of a cycle admission may consume, and ``--alternating`` selects the
+prefill/decode-alternating reference scheduler instead:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
       --variant 1 --scheduler --slots 2 --requests 6 --max-new 32
+
+``--stop-token`` (repeatable) demonstrates per-request stop conditions:
+odd-numbered requests stop at the given token ids, even-numbered ones
+run to ``--max-new`` — both retire their slot the cycle the condition
+lands.
 
 ``--paged`` switches the scheduler's KV cache from per-row (slots, S_max)
 regions to a global pool of ``--block-size``-token blocks addressed
@@ -76,6 +85,15 @@ def run(argv=None):
                     help="prefill chunk: prompts are prefilled in fixed "
                     "chunks of this many tokens so all admissions share "
                     "one compile bucket")
+    ap.add_argument("--alternating", action="store_true",
+                    help="use the prefill/decode-alternating scheduler "
+                    "(the fused mixed-role step is the default)")
+    ap.add_argument("--max-prefill-tokens-per-step", type=int, default=None,
+                    help="fused mode: cap prefill tokens per mixed cycle "
+                    "so admission bursts can't monopolise a cycle")
+    ap.add_argument("--stop-token", type=int, action="append", default=None,
+                    help="per-request stop token id(s); applied to odd-"
+                    "numbered requests (repeatable, scheduler mode)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.paged and not args.scheduler:
@@ -123,18 +141,33 @@ def run(argv=None):
                           speculative=args.variant != 0, rt_extra=rt_extra,
                           paged=args.paged, block_size=args.block_size,
                           num_blocks=args.num_blocks,
-                          chunk_size=args.chunk_size)
+                          chunk_size=args.chunk_size,
+                          fused=not args.alternating,
+                          max_prefill_tokens_per_step=(
+                              args.max_prefill_tokens_per_step))
         t0 = time.time()
         for i in range(args.requests):
-            sched.submit(prompt["tokens"][i % b], max_new=args.max_new)
+            # odd-numbered requests carry the per-request stop list; even
+            # ones run to max_new (per-request conditions, not global EOS)
+            sched.submit(prompt["tokens"][i % b], max_new=args.max_new,
+                         arrival=i / 4.0,
+                         stop_tokens=args.stop_token if i % 2 else None)
         done = sched.run()
         dt = time.time() - t0
         s = sched.summary()
-        print(f"[sched] {len(done)} reqs through {args.slots} slots, "
-              f"cycles={s['cycles']}, tokens/cycle={s['tokens_per_cycle']:.2f}, "
+        mode = "fused" if sched.fused else "alternating"
+        print(f"[sched:{mode}] {len(done)} reqs through {args.slots} "
+              f"slots, cycles={s['cycles']} "
+              f"(prefill={s['prefill_cycles']}, mixed={s['mixed_cycles']}), "
+              f"tokens/cycle={s['tokens_per_cycle']:.2f}, "
               f"acceptance={s['acceptance']}, "
               f"mean latency={s.get('mean_latency_cycles', 0):.1f} cycles, "
               f"wall={dt:.1f}s")
+        print(f"[latency] ttft p50/p95="
+              f"{s.get('ttft_cycles_p50', 0):.1f}/"
+              f"{s.get('ttft_cycles_p95', 0):.1f} cycles, "
+              f"itl p50/p95={s.get('itl_cycles_p50', 0):.1f}/"
+              f"{s.get('itl_cycles_p95', 0):.1f} cycles")
         if args.paged:
             print(f"[paged] pool={s['pool_blocks']} blocks x "
                   f"{s['block_size']} tok, high water="

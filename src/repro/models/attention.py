@@ -116,7 +116,12 @@ def full_mask(prefix_valid: jax.Array, sq: int) -> jax.Array:
     """(B|1,1,Sq,P+Sq): prefix keys per validity mask + causal among new.
 
     ``prefix_valid`` is (P,) or (B,P) — per-batch cache lengths arise in
-    batched speculative decoding where sequences accept different counts.
+    batched speculative decoding where sequences accept different counts,
+    and in fused mixed-role serving where rows of one batch sit at
+    different phases entirely (prefill chunk / draft+verify / idle). A
+    row's garbage tail (chunk padding past its real tokens) needs no
+    extra masking: real queries never attend it causally, and its own
+    outputs are dropped at commit.
     """
     p = prefix_valid.shape[-1]
     b = prefix_valid.shape[0] if prefix_valid.ndim == 2 else 1

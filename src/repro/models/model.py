@@ -618,6 +618,16 @@ def forward_decode(rt: Runtime, params: Params, tokens: jax.Array,
     K/V (B,q,…), per ssm entry {"h_all", "conv_win", "conv", "h"} for
     commit/rollback by the serving engine. ``cache_view`` optionally
     provides pre-materialised dense stores (see materialize_cache_view).
+
+    Rows are fully independent here — per-row ``length`` offsets the
+    positions, the attention prefix mask is per-row, and the slot/paged
+    prefixes are per-row regions/tables — so one pass can carry rows at
+    *different serving phases* (a prompt chunk landing at length L_a
+    beside a γ+1 verify run at L_b beside an idle row): the fused
+    mixed-role serving step (``engine.unified_step``) is just this pass
+    with per-row token selection, and a row's outputs are bit-identical
+    whatever the other rows carry (MoE capacity overflow, which couples
+    rows by design, excepted).
     """
     cfg = rt.cfg
     length = cache["length"]

@@ -18,6 +18,15 @@ One ``spec_decode_step`` per cycle, fully under jit:
    data stays as masked stale garbage until overwritten.
 
 The same machinery with γ=0 is the autoregressive baseline.
+
+``unified_step`` fuses this cycle with chunked prefill admission: one
+mixed-role batch where each row is PREFILL (committing prompt chunk
+tokens), DRAFT+VERIFY (the cycle above) or IDLE, driven by per-row
+role/plan vectors. The serving scheduler plans one such step per cycle,
+so admission piggybacks on decode instead of stalling it
+(``scheduler.Scheduler`` in fused mode); ``spec_decode_step`` /
+``chunk_prefill_step`` remain the single-role reference paths the
+regression tests compare against.
 """
 from __future__ import annotations
 
@@ -139,16 +148,10 @@ def commit(rt: Runtime, cache: dict, updates: list, n: jax.Array) -> dict:
                         new = jax.vmap(
                             lambda x, d=d: KC.encode_store(cass, x, d, book)
                         )(new)
-                    if table is None:
-                        centry[nm] = jax.vmap(
-                            lambda c, nw: KC.append_store_batched(c, nw,
-                                                                  length)
-                        )(centry[nm], new)
-                    else:
-                        centry[nm] = jax.vmap(
-                            lambda c, nw: KC.append_paged_batched(
-                                c, nw, table, length)
-                        )(centry[nm], new)
+                    centry[nm] = jax.vmap(
+                        lambda c, nw: KC.append_batched(c, nw, length,
+                                                        table)
+                    )(centry[nm], new)
             elif "h_all" in upd:
                 # SSM rollback: state after accepting n+1 tokens
                 h_all = upd["h_all"]                  # (R,B,q,di,ns)
@@ -176,14 +179,16 @@ def commit(rt: Runtime, cache: dict, updates: list, n: jax.Array) -> dict:
 # Decode steps
 # ---------------------------------------------------------------------------
 
-def spec_decode_step(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
-                     key: jax.Array, ecfg: EngineConfig
-                     ) -> tuple[SP.AcceptResult, dict]:
-    """One speculative cycle. cur_tokens (B,1) = last committed token."""
+def _run_drafts(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
+                key: jax.Array, ecfg: EngineConfig
+                ) -> tuple[jax.Array, list, jax.Array]:
+    """γ draft steps with ``view="draft"``. Reads the cache, never writes
+    it (scratch/cache-view only), so rows whose draft inputs are garbage
+    (prefill/idle rows riding through a fused cycle) are harmless.
+    Returns (draft_tokens (B,γ), per-step draft logits, key)."""
     cfg = rt.cfg
     gamma = ecfg.gamma
     rt_d = dataclasses.replace(rt, view="draft" if rt.cass else "plain")
-    rt_t = dataclasses.replace(rt, view="target" if rt.cass else "plain")
 
     def sample(lg, key):
         if ecfg.greedy:
@@ -226,24 +231,97 @@ def spec_decode_step(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
             draft_tokens.append(nxt)
             draft_logits.append(lg)
             tok = nxt[:, None]
-    draft_tokens = jnp.stack(draft_tokens, axis=1)        # (B,γ)
+    return jnp.stack(draft_tokens, axis=1), draft_logits, key    # (B,γ)
 
+
+def _accept(draft_tokens: jax.Array, draft_logits: list,
+            t_logits: jax.Array, key: jax.Array,
+            ecfg: EngineConfig) -> SP.AcceptResult:
+    if ecfg.greedy:
+        return SP.greedy_accept(draft_tokens, t_logits[:, :ecfg.gamma + 1],
+                                tie_margin=ecfg.tie_margin)
+    dprobs = jax.nn.softmax(
+        jnp.stack(draft_logits, axis=1) / ecfg.temperature, axis=-1)
+    tprobs = jax.nn.softmax(
+        t_logits[:, :ecfg.gamma + 1] / ecfg.temperature, axis=-1)
+    _, sub = jax.random.split(key)
+    return SP.rejection_sample(draft_tokens, dprobs, tprobs, sub)
+
+
+def spec_decode_step(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
+                     key: jax.Array, ecfg: EngineConfig
+                     ) -> tuple[SP.AcceptResult, dict]:
+    """One speculative cycle. cur_tokens (B,1) = last committed token.
+
+    This is the pure decode-only step (the fixed-batch ``Engine`` path and
+    the alternating scheduler's reference). ``unified_step`` runs the same
+    per-row math for decode rows of a mixed-role batch — the regression
+    tests in tests/test_scheduler.py hold them bit-identical."""
+    rt_t = dataclasses.replace(rt, view="target" if rt.cass else "plain")
+    draft_tokens, draft_logits, key = _run_drafts(rt, params, cache,
+                                                  cur_tokens, key, ecfg)
     # batched verification over [cur ++ drafts]
     ver_tokens = jnp.concatenate([cur_tokens, draft_tokens], axis=1)
     t_logits, t_upd = M.forward_decode(rt_t, params, ver_tokens, cache)
-
-    if ecfg.greedy:
-        res = SP.greedy_accept(draft_tokens, t_logits,
-                               tie_margin=ecfg.tie_margin)
-    else:
-        dprobs = jax.nn.softmax(
-            jnp.stack(draft_logits, axis=1) / ecfg.temperature, axis=-1)
-        tprobs = jax.nn.softmax(t_logits / ecfg.temperature, axis=-1)
-        key, sub = jax.random.split(key)
-        res = SP.rejection_sample(draft_tokens, dprobs, tprobs, sub)
-
+    res = _accept(draft_tokens, draft_logits, t_logits, key, ecfg)
     cache = commit(rt, cache, t_upd, res.n_accepted)
     return res, cache
+
+
+def unified_step(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
+                 chunk_tokens: jax.Array, prefill_valid: jax.Array,
+                 decode_mask: jax.Array, key: jax.Array, ecfg: EngineConfig
+                 ) -> tuple[SP.AcceptResult, jax.Array, dict]:
+    """One fused serving cycle over a mixed-role batch.
+
+    Per-row roles, all traced operands (any role mix hits ONE compile):
+
+    * **PREFILL** (``prefill_valid[b] > 0``) — commit the next
+      ``prefill_valid[b]`` prompt tokens from ``chunk_tokens[b]``; the
+      returned ``last_logits[b]`` row holds the logits at the chunk's
+      last real token (the first generated token once the prompt is
+      exhausted).
+    * **DRAFT+VERIFY** (``decode_mask[b]``) — one speculative cycle on
+      ``cur_tokens[b]``; results land in the returned ``AcceptResult``.
+    * **IDLE** (neither) — commits one garbage token into its masked
+      stale region / the trash block; the caller freezes its length and
+      recurrent state (``scheduler._freeze_rows``).
+
+    ``chunk_tokens`` is (B, γ+1): the fused pass width IS the verify
+    width, so decode rows see exactly the shapes (and therefore XLA
+    reduction orders) of ``spec_decode_step`` — mixed-role admission is
+    lossless for them — and prefill chunks ride the decode compile bucket
+    instead of stalling it. The γ draft passes run for every row; prefill
+    and idle rows' draft outputs are garbage that never touches the cache
+    (drafts write scratch only). One target pass then serves as verify
+    for decode rows and as the chunk-prefill forward for prefill rows.
+
+    The per-row bitwise guarantee holds for row-independent architectures
+    (every dense op here is per-row). MoE capacity overflow is the one
+    batch-coupled op: all rows' tokens compete for shared expert slots,
+    so on MoE models what rides alongside a row can flip its dropped
+    tokens — true of ANY masked batched step (the alternating
+    scheduler's frozen riders included, since PR 1), not specific to
+    mixed roles. Keep ``moe_capacity_factor`` high enough that overflow
+    never fires if bitwise serving parity on MoE archs matters.
+    """
+    rt_t = dataclasses.replace(rt, view="target" if rt.cass else "plain")
+    draft_tokens, draft_logits, key = _run_drafts(rt, params, cache,
+                                                  cur_tokens, key, ecfg)
+    is_prefill = prefill_valid > 0
+    ver_tokens = jnp.concatenate([cur_tokens, draft_tokens], axis=1)
+    tokens = jnp.where(is_prefill[:, None], chunk_tokens, ver_tokens)
+    t_logits, t_upd = M.forward_decode(rt_t, params, tokens, cache)
+    res = _accept(draft_tokens, draft_logits, t_logits, key, ecfg)
+    # role-masked commit width: prefill rows commit their chunk's real
+    # tokens, decode rows their accepted run + bonus, idle rows one
+    # masked garbage token
+    n = jnp.where(is_prefill,
+                  jnp.maximum(prefill_valid.astype(jnp.int32), 1) - 1,
+                  jnp.where(decode_mask, res.n_accepted, 0))
+    cache = commit(rt, cache, t_upd, n)
+    last = jnp.take_along_axis(t_logits, n[:, None, None], axis=1)[:, 0]
+    return res, last, cache
 
 
 def chunk_prefill_step(rt: Runtime, params, cache: dict,

@@ -187,6 +187,24 @@ def gather_store(store, table: jax.Array):
     return jax.tree.map(lambda c: gather_block_leaf(c, table), store)
 
 
+def append_batched(store, new_store, at: jax.Array,
+                   table: jax.Array | None = None):
+    """THE append path: per-row token runs into either cache layout.
+
+    ``new_store`` leaves are (B,q,…) token runs; row ``b`` writes at its
+    own logical offset ``at[b]``. With ``table=None`` the run scatters
+    into the row's contiguous (B,S,…) slot region; with a (B,MB) block
+    table it scatters through the table into the (NB,BS,…) pool. Rows in
+    the same batch may carry different real run lengths (mixed prefill
+    chunks riding with speculative commits): callers write the full q
+    width and advance ``length`` by the per-row real count, leaving the
+    tail as masked stale data (slot) or trash-block writes (paged).
+    """
+    if table is None:
+        return append_store_batched(store, new_store, at)
+    return append_paged_batched(store, new_store, table, at)
+
+
 def append_paged_batched(store, new_store, table: jax.Array,
                          at: jax.Array) -> dict:
     """Scatter per-row token runs into the block pool through the table.

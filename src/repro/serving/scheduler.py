@@ -4,8 +4,30 @@ The paper's serving scenario (§VI) is memory-budgeted edge decode: many
 independent requests, low instantaneous batch, long reasoning outputs. The
 fixed-batch ``Engine.generate`` loop cannot admit or retire requests — the
 whole batch runs until the *slowest* row finishes. This scheduler
-multiplexes a request queue through the same jit'd ``spec_decode_step``:
+multiplexes a request queue through one jit'd serving step per cycle.
 
+* **Fused serving step (default)** — ``step()`` is a *planner*: each
+  cycle it builds one ``CyclePlan`` work descriptor (which rows consume
+  prompt-chunk tokens, which run a draft+verify cycle, which idle) and
+  executes it with a single ``engine.unified_step`` call. Admission
+  piggybacks on decode cycles — a prefilling row never stalls resident
+  decode rows — and every role mix (admission, growth, retirement, all
+  roles at once) hits the ONE fused compile bucket. Prefill advances up
+  to γ+1 tokens per row per cycle (the fused pass width is the verify
+  width, keeping decode rows bit-identical to the alternating path);
+  ``max_prefill_tokens_per_step`` caps the per-cycle prefill token total
+  so a burst of admissions cannot monopolise the cycle's compute. The
+  planner keeps a second, wide ``chunk_size`` admission bucket for the
+  cycles where riding is wrong: an empty decode pool (cold start —
+  nothing to piggyback on or stall), or a token-cost comparison showing
+  the prompt's extra slot-occupancy under γ+1-wide riding exceeds one
+  stall of the resident decode rows (``_plan_wide_cycle``). Both buckets
+  compile once at warmup — zero recompiles for any later role mix.
+* **Alternating mode** (``fused=False``) — the PR 2 reference: cycles
+  alternate between ``chunk_prefill_step`` (admission chunks, decode rows
+  frozen) and ``spec_decode_step`` (decode, prefilling rows frozen).
+  Kept as the losslessness/latency baseline; ``speculative=False``
+  (autoregressive) always uses it.
 * **Cache layouts** — ``paged=False``: a fixed (B, S_max) slot cache, one
   contiguous row per request (short requests strand the row tail).
   ``paged=True``: a global pool of fixed-size token blocks shared by all
@@ -13,16 +35,13 @@ multiplexes a request queue through the same jit'd ``spec_decode_step``:
   A request *reserves* its worst-case blocks at admission (no mid-flight
   OOM) but blocks are allocated lazily as the sequence grows into them,
   so resident memory tracks actual tokens, not the S_max bound.
-* **Admission** — chunked + batched: prompts prefill in fixed-size
-  ``chunk_size`` chunks through one shared compile bucket
-  (``chunk_prefill_step``); however many requests arrive, and whatever
-  their lengths, admission compiles exactly once. Rows mid-decode ride
-  along frozen during a prefill cycle (and vice versa).
-* **Decode** — one speculative cycle advances all prefilled rows;
-  frozen/free rows keep their length and recurrent state pinned so their
-  state is inert until recycled.
-* **Retirement** — per-row early exit on EOS or ``max_new``; the slot (and
+* **Retirement** — per-row early exit on ``max_new``, the global
+  ``eos_id``, or any of the request's own ``stop_tokens``; the slot (and
   its blocks, when paged) is freed immediately for the next request.
+* **Latency accounting** — every delivered token records its commit
+  cycle and wall time, so ``summary()`` reports TTFT and p50/p95
+  inter-token latency (the fused-vs-alternating headline in
+  ``benchmarks/throughput.py``).
 
 γ=0 / ``speculative=False`` degrades to continuous-batching autoregressive
 decode — the serving baseline for ``benchmarks/throughput.py``.
@@ -30,6 +49,7 @@ decode — the serving baseline for ``benchmarks/throughput.py``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from functools import partial
 
@@ -45,7 +65,8 @@ from repro.serving import kvcache as KC
 from repro.serving.blockpool import (BlockAllocator, TRASH_BLOCK,
                                      blocks_needed)
 from repro.serving.engine import (EngineConfig, autoregressive_step,
-                                  chunk_prefill_step, spec_decode_step)
+                                  chunk_prefill_step, spec_decode_step,
+                                  unified_step)
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 
@@ -57,17 +78,47 @@ class Request:
     tokens: np.ndarray                  # (L,) int prompt
     max_new: int
     arrival: float = 0.0                # scheduler-clock cycle of arrival
+    stop_tokens: tuple = ()             # per-request stop ids (besides eos)
     state: str = QUEUED
     slot: int = -1
     pos: int = 0                        # prompt tokens prefilled so far
     prefill_done: bool = False
     output: list = dataclasses.field(default_factory=list)
+    token_cycles: list = dataclasses.field(default_factory=list)
+    token_walls: list = dataclasses.field(default_factory=list)
     admitted_at: float = -1.0
     finished_at: float = -1.0
 
     @property
     def done(self) -> bool:
         return self.state == FINISHED
+
+    @property
+    def ttft_cycles(self) -> float | None:
+        """Cycles from arrival to the first delivered token."""
+        if not self.token_cycles:
+            return None
+        return self.token_cycles[0] - self.arrival
+
+    @property
+    def itl_cycles(self) -> np.ndarray:
+        """Inter-token gaps in cycles (speculative bursts contribute 0s)."""
+        return np.diff(np.asarray(self.token_cycles, np.float64))
+
+
+@dataclasses.dataclass
+class CyclePlan:
+    """One fused cycle's work descriptor, built by the planner.
+
+    ``chunk_tokens`` (slots, γ+1) / ``prefill_valid`` (slots,) carry each
+    prefilling row's next prompt tokens; ``decode_mask`` (slots,) marks
+    rows running a draft+verify cycle. Rows in neither set idle frozen.
+    """
+    chunk_tokens: np.ndarray
+    prefill_valid: np.ndarray
+    decode_mask: np.ndarray
+    prefilling: list
+    decoding: list
 
 
 def _freeze_rows(cache0: dict, cache: dict, active: jax.Array) -> dict:
@@ -117,6 +168,17 @@ def _masked_chunk(rt: Runtime, params, cache: dict, tokens: jax.Array,
     return last, _freeze_rows(cache, new_cache, valid > 0)
 
 
+def _masked_unified(rt: Runtime, params, cache: dict, cur: jax.Array,
+                    chunk_tokens: jax.Array, prefill_valid: jax.Array,
+                    decode_mask: jax.Array, key: jax.Array,
+                    ecfg: EngineConfig):
+    res, last, new_cache = unified_step(rt, params, cache, cur,
+                                        chunk_tokens, prefill_valid,
+                                        decode_mask, key, ecfg)
+    active = decode_mask | (prefill_valid > 0)
+    return res, last, _freeze_rows(cache, new_cache, active)
+
+
 class Scheduler:
     """Continuous-batching front end over the speculative decode step."""
 
@@ -127,7 +189,8 @@ class Scheduler:
                  eos_id: int | None = None, speculative: bool = True,
                  rt_extra: dict = {}, paged: bool = False,
                  block_size: int = 16, num_blocks: int | None = None,
-                 chunk_size: int = 32):
+                 chunk_size: int = 32, fused: bool = True,
+                 max_prefill_tokens_per_step: int | None = None):
         if cfg.frontend:
             raise NotImplementedError(
                 "scheduler admission is token-prompt only for now")
@@ -137,6 +200,15 @@ class Scheduler:
         self.eos_id, self.speculative = eos_id, speculative
         self.paged, self.block_size = paged, block_size
         self.chunk_size = chunk_size
+        # the fused step IS a speculative cycle; the autoregressive
+        # baseline keeps the alternating prefill/decode loop
+        self.fused = fused and speculative
+        if (max_prefill_tokens_per_step is not None
+                and max_prefill_tokens_per_step < 1):
+            raise ValueError(
+                "max_prefill_tokens_per_step must be >= 1 (or None): a "
+                "zero budget would strand prefilling rows forever")
+        self.max_prefill_tokens_per_step = max_prefill_tokens_per_step
         self.rt = Runtime(cfg=cfg, cass=cass,
                           view="target" if cass else "plain", **rt_extra)
         packed = cass is not None
@@ -153,13 +225,25 @@ class Scheduler:
             self.cache = KC.init_cache(cfg, cass, num_slots, s_max,
                                        packed=packed)
             self.capacity = s_max
-        self._spec = jax.jit(partial(_masked_spec, self.rt, ecfg=ecfg),
-                             donate_argnums=(1,))
-        self._auto = jax.jit(partial(_masked_auto, self.rt),
-                             donate_argnums=(1,))
-        self._chunk = jax.jit(partial(_masked_chunk, self.rt),
-                              donate_argnums=(1,))
+        # trace_counts[name] increments when jit (re)traces that step — the
+        # compile-count guard: a serving run must trace each step at most
+        # once, whatever mix of admission/growth/retirement it sees
+        self.trace_counts: dict[str, int] = {}
+        self._spec = self._jit_step(
+            "spec", partial(_masked_spec, self.rt, ecfg=ecfg))
+        self._auto = self._jit_step("auto", partial(_masked_auto, self.rt))
+        self._chunk = self._jit_step(
+            "chunk", partial(_masked_chunk, self.rt))
+        self._unified = self._jit_step(
+            "unified", partial(_masked_unified, self.rt, ecfg=ecfg))
         self._reset_state()
+
+    def _jit_step(self, name: str, fn):
+        """jit with a trace counter (cache is arg 1 in every step, donated)."""
+        def counted(*args):
+            self.trace_counts[name] = self.trace_counts.get(name, 0) + 1
+            return fn(*args)
+        return jax.jit(counted, donate_argnums=(1,))
 
     def _reset_state(self) -> None:
         self.slots: list[Request | None] = [None] * self.num_slots
@@ -169,7 +253,9 @@ class Scheduler:
         self.cur = np.zeros((self.num_slots, 1), np.int32)
         self.clock = 0.0                                # decode-cycle clock
         self.key = jax.random.PRNGKey(0)
-        self.stats = {"cycles": 0, "prefill_cycles": 0, "committed": 0,
+        self.stats = {"cycles": 0, "prefill_cycles": 0, "mixed_cycles": 0,
+                      "prefill_tokens": 0,
+                      "peak_prefill_tokens_per_cycle": 0, "committed": 0,
                       "accepted": 0, "drafted": 0, "admitted": 0,
                       "finished": 0, "peak_resident_tokens": 0,
                       "peak_reserved_tokens": 0}
@@ -189,7 +275,11 @@ class Scheduler:
     # -- queue -------------------------------------------------------------
 
     def submit(self, tokens, max_new: int, arrival: float = 0.0,
-               rid: int | None = None) -> Request:
+               rid: int | None = None,
+               stop_tokens=None) -> Request:
+        """Queue one request. ``stop_tokens`` is an optional per-request
+        list of token ids that end generation early (delivered inclusive,
+        like EOS) — on top of the scheduler-global ``eos_id``."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         need = len(tokens) + max_new + self.ecfg.gamma + 1
         if need > self.capacity:
@@ -202,7 +292,8 @@ class Scheduler:
                 f"request needs {blocks_needed(need, self.block_size)} "
                 f"blocks, pool has {self.pool.capacity}")
         req = Request(rid=self._next_rid if rid is None else rid,
-                      tokens=tokens, max_new=max_new, arrival=arrival)
+                      tokens=tokens, max_new=max_new, arrival=arrival,
+                      stop_tokens=tuple(stop_tokens or ()))
         self._next_rid = req.rid + 1
         self.queue.append(req)
         return req
@@ -221,6 +312,7 @@ class Scheduler:
     def _admit(self, req: Request, slot: int) -> None:
         req.state, req.slot, req.admitted_at = RUNNING, slot, self.clock
         req.pos, req.prefill_done, req.output = 0, False, []
+        req.token_cycles, req.token_walls = [], []
         self.slots[slot] = req
         self.lengths[slot] = 0
         if self.paged:
@@ -252,14 +344,22 @@ class Scheduler:
     # -- retirement --------------------------------------------------------
 
     def _maybe_retire(self, req: Request) -> None:
-        # never deliver past max_new, even when EOS lands beyond it
+        # never deliver past max_new, even when a stop lands beyond it
         capped = req.output[:req.max_new]
-        if self.eos_id is not None and self.eos_id in capped:
-            req.output = capped[:capped.index(self.eos_id) + 1]
+        stops = set(req.stop_tokens)
+        if self.eos_id is not None:
+            stops.add(self.eos_id)
+        cut = next((i + 1 for i, t in enumerate(capped) if t in stops),
+                   None) if stops else None
+        if cut is not None:
+            req.output = capped[:cut]
         elif len(req.output) >= req.max_new:
             req.output = capped
         else:
             return
+        # truncation also drops the trimmed tokens' latency samples
+        req.token_cycles = req.token_cycles[:len(req.output)]
+        req.token_walls = req.token_walls[:len(req.output)]
         req.state, req.finished_at = FINISHED, self.clock
         self.slots[req.slot] = None
         if self.paged:
@@ -267,6 +367,39 @@ class Scheduler:
             self.table[req.slot, :] = TRASH_BLOCK
         self.finished.append(req)
         self.stats["finished"] += 1
+
+    def _record_tokens(self, req: Request, k: int) -> None:
+        """Stamp ``k`` just-committed tokens with this cycle's end time."""
+        now = time.time()
+        req.token_cycles.extend([self.clock + 1.0] * k)
+        req.token_walls.extend([now] * k)
+
+    def _harvest_decode_row(self, req: Request, tokens: np.ndarray,
+                            valid: np.ndarray, n: np.ndarray,
+                            nxt: np.ndarray) -> None:
+        """Fold one decode row's cycle results into the request: extend
+        its output with the accepted run, stamp the tokens, advance the
+        host length by n+1, and retire if a stop condition landed. Shared
+        by the fused and alternating paths — retirement/accounting fixes
+        apply to both (the losslessness tests compare them)."""
+        slot = req.slot
+        before = len(req.output)
+        req.output.extend(tokens[slot][valid[slot]].tolist())
+        self._record_tokens(req, len(req.output) - before)
+        self.lengths[slot] += int(n[slot]) + 1
+        self.cur[slot, 0] = nxt[slot]
+        self._maybe_retire(req)
+        # delivered tokens only: retirement truncates past stops/max_new
+        self.stats["committed"] += len(req.output) - before
+
+    def _fast_forward(self) -> bool:
+        """No resident work: jump the clock to the next queued arrival
+        (True) or report the scheduler idle (False)."""
+        if self.queue:
+            self.clock = max(self.clock,
+                             min(r.arrival for r in self.queue))
+            return True
+        return False
 
     # -- device-state sync ---------------------------------------------------
 
@@ -318,20 +451,150 @@ class Scheduler:
             r.pos += int(valid[r.slot])
             self.lengths[r.slot] += int(valid[r.slot])
             if r.pos >= len(r.tokens):
-                first = int(np.argmax(last[r.slot]))
-                r.prefill_done = True
-                r.output = [first]
-                self.cur[r.slot, 0] = first
-                self._maybe_retire(r)
+                self._finish_prefill(r, last[r.slot])
         self.stats["prefill_cycles"] += 1
+
+    def _finish_prefill(self, req: Request, last_logits: np.ndarray) -> None:
+        """Prompt exhausted: its last-position logits yield the first
+        generated token; the row becomes a decode row next cycle."""
+        first = int(np.argmax(last_logits))
+        req.prefill_done = True
+        req.output = [first]
+        self._record_tokens(req, 1)
+        self.cur[req.slot, 0] = first
+        self._maybe_retire(req)
+
+    # -- planner (fused mode) ----------------------------------------------
+
+    def _plan_cycle(self) -> CyclePlan | None:
+        """Build the cycle's work descriptor: every resident row gets a
+        role (PREFILL chunk / DRAFT+VERIFY / IDLE). Prefill rows consume
+        up to γ+1 prompt tokens each, capped across rows by
+        ``max_prefill_tokens_per_step`` (rows past the budget idle one
+        cycle — admission can never monopolise a cycle's compute).
+        Returns None when no resident row has work."""
+        width = self.ecfg.gamma + 1
+        chunk = np.zeros((self.num_slots, width), np.int32)
+        valid = np.zeros(self.num_slots, np.int32)
+        dmask = np.zeros(self.num_slots, bool)
+        prefilling: list[Request] = []
+        decoding: list[Request] = []
+        budget = self.max_prefill_tokens_per_step
+        budget = budget if budget is not None else self.num_slots * width
+        for slot, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if r.prefill_done:
+                dmask[slot] = True
+                decoding.append(r)
+            elif budget > 0:
+                v = min(width, len(r.tokens) - r.pos, budget)
+                chunk[slot, :v] = r.tokens[r.pos:r.pos + v]
+                valid[slot] = v
+                budget -= v
+                prefilling.append(r)
+        if not prefilling and not decoding:
+            return None
+        return CyclePlan(chunk_tokens=chunk, prefill_valid=valid,
+                         decode_mask=dmask, prefilling=prefilling,
+                         decoding=decoding)
+
+    def _plan_wide_cycle(self, plan: CyclePlan) -> bool:
+        """Should this cycle run the wide admission bucket instead of the
+        fused step?
+
+        With an empty decode pool, always (γ+1-wide prefill would only
+        throttle admission, and there is nobody to stall). With decode
+        rows resident, compare token costs: riding fused cycles keeps
+        each prefilling row's slot busy ``ceil(R/(γ+1))`` cycles instead
+        of ``ceil(R/chunk)`` (extra row-cycles of lost occupancy), while
+        one wide stall cycle delays every decode row by one cycle
+        (``n_decode`` row-cycles). Stall only when riding is strictly
+        dearer — short prompts ride (no admission stall, flat inter-token
+        latency), long prompts against few decode rows take the stall the
+        alternating scheduler would have paid anyway."""
+        if not plan.decoding:
+            return True
+        if not plan.prefilling:
+            return False
+        w, c = self.ecfg.gamma + 1, self.chunk_size
+        ride_extra = sum(
+            -(-(len(r.tokens) - r.pos) // w)
+            - -(-(len(r.tokens) - r.pos) // c)
+            for r in plan.prefilling)
+        return ride_extra > len(plan.decoding)
+
+    def _fused_step(self) -> bool:
+        """Execute one planned mixed-role cycle via ``unified_step``."""
+        plan = self._plan_cycle()
+        if plan is None:
+            return self._fast_forward()
+        if self._plan_wide_cycle(plan):
+            # wide ``chunk_size``-bucket cycle: either the decode pool is
+            # empty (cold start — nothing to piggyback on or stall), or
+            # the cost model says riding is dearer than one stall (long
+            # prompts × few decode rows). Both buckets compile once at
+            # warmup; zero recompiles after.
+            self._prefill_cycle([r for r in self.slots
+                                 if r is not None and not r.prefill_done])
+            self._track_residency()
+            self.stats["cycles"] += 1
+            self.clock += 1.0
+            return True
+        if self.paged:
+            for r in plan.prefilling:
+                self._grow_blocks(r, r.pos + int(plan.prefill_valid[r.slot]))
+            for r in plan.decoding:
+                self._grow_blocks(r, int(self.lengths[r.slot])
+                                  + self.ecfg.gamma + 1)
+        self._push_host_state()
+        self.key, sub = jax.random.split(self.key)
+        res, last, self.cache = self._unified(
+            self.params, self.cache, jnp.asarray(self.cur),
+            jnp.asarray(plan.chunk_tokens), jnp.asarray(plan.prefill_valid),
+            jnp.asarray(plan.decode_mask), sub)
+        # harvest prefill rows
+        if plan.prefilling:
+            last = np.asarray(last)
+            for r in plan.prefilling:
+                v = int(plan.prefill_valid[r.slot])
+                r.pos += v
+                self.lengths[r.slot] += v
+                self.stats["prefill_tokens"] += v
+                if r.pos >= len(r.tokens):
+                    self._finish_prefill(r, last[r.slot])
+            self.stats["prefill_cycles"] += 1
+            self.stats["mixed_cycles"] += 1
+            self.stats["peak_prefill_tokens_per_cycle"] = max(
+                self.stats["peak_prefill_tokens_per_cycle"],
+                int(plan.prefill_valid.sum()))
+        # harvest decode rows
+        if plan.decoding:
+            tokens = np.asarray(res.tokens)
+            valid = np.asarray(res.valid)
+            n = np.asarray(res.n_accepted)
+            nxt = np.asarray(res.next_token)
+            for r in plan.decoding:
+                self._harvest_decode_row(r, tokens, valid, n, nxt)
+            dmask = plan.decode_mask
+            self.stats["accepted"] += int(n[dmask].sum())
+            self.stats["drafted"] += self.ecfg.gamma * int(dmask.sum())
+        self._track_residency()
+        self.stats["cycles"] += 1
+        self.clock += 1.0
+        return True
 
     # -- decode ------------------------------------------------------------
 
     def step(self) -> bool:
-        """Admit what's ready, run one prefill-chunk or decode cycle.
+        """Admit what's ready, then run one serving cycle — a fused
+        mixed-role step (default), or the alternating prefill-chunk /
+        decode cycle (``fused=False`` and the autoregressive baseline).
         Returns False when there was nothing to do (idle or all arrivals
         in the future)."""
         self._admit_ready()
+        if self.fused:
+            return self._fused_step()
         prefilling = [r for r in self.slots
                       if r is not None and not r.prefill_done]
         if prefilling:
@@ -342,11 +605,7 @@ class Scheduler:
             return True
         active = np.array([r is not None for r in self.slots])
         if not active.any():
-            if self.queue:                  # fast-forward to next arrival
-                self.clock = max(self.clock,
-                                 min(r.arrival for r in self.queue))
-                return True
-            return False
+            return self._fast_forward()
         horizon = (self.ecfg.gamma + 1) if self.speculative else 1
         if self.paged:
             for slot in np.flatnonzero(active):
@@ -373,14 +632,8 @@ class Scheduler:
             valid = np.ones_like(tokens, bool)
             n = np.zeros(self.num_slots, np.int64)
         for slot in np.flatnonzero(active):
-            req = self.slots[slot]
-            before = len(req.output)
-            req.output.extend(tokens[slot][valid[slot]].tolist())
-            self.lengths[slot] += int(n[slot]) + 1
-            self.cur[slot, 0] = nxt[slot]
-            self._maybe_retire(req)
-            # delivered tokens only: retirement truncates past EOS/max_new
-            self.stats["committed"] += len(req.output) - before
+            self._harvest_decode_row(self.slots[slot], tokens, valid, n,
+                                     nxt)
         self._track_residency()
         self.stats["cycles"] += 1
         self.clock += 1.0
@@ -396,6 +649,37 @@ class Scheduler:
                                "cycles")
         return self.finished
 
+    def latency_summary(self) -> dict:
+        """TTFT and inter-token latency percentiles over finished requests.
+
+        Cycle units are deterministic (the unit the λ arrival clock runs
+        in) and are what the benchmark gate compares; the wall-clock ITL
+        percentiles (ms) sit beside them for operator-facing numbers. A
+        speculative burst delivers its run in one cycle/commit, so
+        in-burst gaps are 0; stall cycles (alternating-mode admissions)
+        surface as gaps ≥ 2 cycles. TTFT has no wall counterpart —
+        arrivals are virtual cycle timestamps, not wall times."""
+        ttft = [r.ttft_cycles for r in self.finished
+                if r.ttft_cycles is not None]
+        gaps = np.concatenate(
+            [r.itl_cycles for r in self.finished] or [np.zeros(0)])
+        wall_gaps = np.concatenate(
+            [np.diff(np.asarray(r.token_walls, np.float64))
+             for r in self.finished] or [np.zeros(0)])
+        out: dict = {}
+        if ttft:
+            out["ttft_cycles_mean"] = float(np.mean(ttft))
+            out["ttft_cycles_p50"] = float(np.percentile(ttft, 50))
+            out["ttft_cycles_p95"] = float(np.percentile(ttft, 95))
+        if gaps.size:
+            out["itl_cycles_mean"] = float(np.mean(gaps))
+            out["itl_cycles_p50"] = float(np.percentile(gaps, 50))
+            out["itl_cycles_p95"] = float(np.percentile(gaps, 95))
+        if wall_gaps.size:
+            out["itl_ms_p50"] = float(np.percentile(wall_gaps, 50) * 1e3)
+            out["itl_ms_p95"] = float(np.percentile(wall_gaps, 95) * 1e3)
+        return out
+
     def summary(self) -> dict:
         s = dict(self.stats)
         s["tokens_per_cycle"] = s["committed"] / max(s["cycles"], 1)
@@ -404,6 +688,7 @@ class Scheduler:
         if self.finished:
             lat = [r.finished_at - r.arrival for r in self.finished]
             s["mean_latency_cycles"] = float(np.mean(lat))
+            s.update(self.latency_summary())
         if self.paged:
             s["pool_blocks"] = self.pool.capacity
             s["pool_high_water_blocks"] = self.pool.high_water

@@ -1,10 +1,15 @@
-"""Continuous-batching scheduler: admission, slot recycling, early exit.
+"""Continuous-batching scheduler: admission, slot recycling, early exit,
+and the fused mixed-role serving step.
 
 Uses plain (uncompressed) params so draft == target: the speculative path
 compiles once and accepts everything, which keeps this module in the fast
 tier while still exercising the full admit → decode → retire → recycle
 lifecycle. Schedulers are module-scoped and ``reset()`` between tests so
-the jit cache is paid for once.
+the jit cache is paid for once. The module-scoped schedulers run in fused
+mode (the default), so every lifecycle test here also exercises
+``unified_step``; the dedicated fused tests below additionally pin
+bit-identity against the single-role reference steps and the alternating
+scheduler, and guard the one-compile-bucket property.
 """
 import numpy as np
 import pytest
@@ -228,6 +233,217 @@ def test_paged_duplicate_rids_ok(model, paged_sched):
     assert all(len(r.output) == MAX_NEW for r in reqs)
     assert sched.pool.allocated_total == 0
     sched.pool.check_invariants()
+
+
+# -- fused mixed-role step ---------------------------------------------------
+
+
+def _decode_ready_cache(cfg, params, rt, b=2, s_max=24):
+    """Prefill a tiny batch so decode-step inputs exist."""
+    from repro.models import forward_prefill
+    from repro.serving import kvcache as KC
+    cache = KC.init_cache(cfg, None, b, s_max, packed=False)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (b, 8), 0,
+                                          cfg.vocab_size)}
+    logits, cache = jax.jit(
+        lambda p, bt, c: forward_prefill(rt, p, bt, c))(params, batch, cache)
+    cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    return cache, cur
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+def test_unified_zero_prefill_bit_identical_to_spec(model):
+    """A fused step whose role vector is all-DECODE must be bit-identical
+    to the PR 2 ``spec_decode_step`` — AcceptResult and the whole
+    committed cache tree, garbage tail included (same pass, same
+    shapes, same reduction orders)."""
+    from repro.models.layers import Runtime
+    from repro.serving.engine import (EngineConfig, spec_decode_step,
+                                      unified_step)
+    cfg, params = model
+    rt = Runtime(cfg=cfg, view="plain", ssm_chunk=8)
+    ecfg = EngineConfig(gamma=GAMMA)
+    b, w = 2, GAMMA + 1
+    cache, cur = _decode_ready_cache(cfg, params, rt, b=b)
+    key = jax.random.PRNGKey(3)
+    res_s, cache_s = jax.jit(
+        lambda p, c, t, k: spec_decode_step(rt, p, c, t, k, ecfg)
+    )(params, cache, cur, key)
+    res_u, _, cache_u = jax.jit(
+        lambda p, c, t, ch, v, d, k: unified_step(rt, p, c, t, ch, v, d, k,
+                                                  ecfg)
+    )(params, cache, cur, jnp.zeros((b, w), jnp.int32),
+      jnp.zeros((b,), jnp.int32), jnp.ones((b,), bool), key)
+    assert _trees_equal(res_s._asdict(), res_u._asdict())
+    assert _trees_equal(cache_s, cache_u)
+
+
+def test_unified_zero_decode_bit_identical_to_chunk(model):
+    """A fused step whose role vector is all-PREFILL must be bit-identical
+    to ``chunk_prefill_step`` at the same chunk width: last-position
+    logits and the whole committed cache tree."""
+    from repro.models.layers import Runtime
+    from repro.serving.engine import (EngineConfig, chunk_prefill_step,
+                                      unified_step)
+    cfg, params = model
+    rt = Runtime(cfg=cfg, view="plain", ssm_chunk=8)
+    ecfg = EngineConfig(gamma=GAMMA)
+    b, w = 2, GAMMA + 1
+    cache, cur = _decode_ready_cache(cfg, params, rt, b=b)
+    chunk = jax.random.randint(jax.random.PRNGKey(5), (b, w), 0,
+                               cfg.vocab_size)
+    valid = jnp.full((b,), w, jnp.int32)
+    last_c, cache_c = jax.jit(
+        lambda p, c, t, v: chunk_prefill_step(rt, p, c, t, v)
+    )(params, cache, chunk, valid)
+    _, last_u, cache_u = jax.jit(
+        lambda p, c, t, ch, v, d, k: unified_step(rt, p, c, t, ch, v, d, k,
+                                                  ecfg)
+    )(params, cache, cur, chunk, valid, jnp.zeros((b,), bool),
+      jax.random.PRNGKey(3))
+    assert bool(jnp.array_equal(last_c, last_u))
+    assert _trees_equal(cache_c, cache_u)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_fused_matches_alternating_trace(model, paged):
+    """Losslessness: a staggered mixed-length trace through the fused
+    scheduler yields per-request outputs identical to the alternating
+    (PR 2) scheduler, on both cache layouts. The alternating run uses
+    chunk_size=γ+1 so its prefill passes see the fused pass width (the
+    one shape a chunked prefill's logits may legitimately depend on)."""
+    cfg, params = model
+    key = jax.random.PRNGKey(7)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(key, i), (int(ln),), 0, cfg.vocab_size))
+        for i, ln in enumerate([8, 5, 8, 3, 7])]
+    outs = []
+    for fused in (True, False):
+        sched = Scheduler(cfg, params, cass=None,
+                          ecfg=EngineConfig(gamma=GAMMA),
+                          num_slots=2, s_max=S_MAX,
+                          rt_extra={"ssm_chunk": 8}, fused=fused,
+                          chunk_size=GAMMA + 1, paged=paged,
+                          block_size=4, num_blocks=10)
+        reqs = [sched.submit(p, max_new=MAX_NEW, arrival=i / 2.0)
+                for i, p in enumerate(prompts)]
+        sched.run()
+        assert all(r.done for r in reqs)
+        outs.append([r.output for r in reqs])
+        if fused:
+            # interleaving win: admissions ride decode cycles instead of
+            # stalling them, so the fused run never takes more cycles
+            fused_cycles = sched.summary()["cycles"]
+            assert sched.stats["mixed_cycles"] > 0
+    assert outs[0] == outs[1]
+    assert fused_cycles <= sched.summary()["cycles"]
+
+
+def test_fused_single_compile_bucket(model, spec_sched):
+    """Compile-count guard: ONE fused-step compilation serves admission,
+    growth, retirement and every mixed role vector (plus at most one
+    wide-chunk compile for zero-decode cold-start cycles). Asserted via
+    the scheduler's trace counter and the jit cache itself."""
+    cfg, _ = model
+    spec_sched.reset()
+    spec_sched.eos_id = None
+    lens = [8, 3, 7, 5, 8, 2]
+    reqs = [spec_sched.submit(
+        _prompts(cfg, 1, length=ln, seed=50 + i)[0], max_new=MAX_NEW,
+        arrival=i / 2.0) for i, ln in enumerate(lens)]
+    done = spec_sched.run()
+    assert len(done) == len(reqs)
+    assert spec_sched.stats["mixed_cycles"] > 0      # roles really mixed
+    assert spec_sched.trace_counts.get("unified", 0) == 1
+    assert spec_sched._unified._cache_size() == 1
+    # the only other bucket ever traced is the wide admission chunk for
+    # zero-decode cycles; the alternating spec step never runs
+    assert spec_sched.trace_counts.get("chunk", 0) <= 1
+    assert "spec" not in spec_sched.trace_counts
+
+
+def test_prefill_budget_caps_tokens_not_outputs(model, spec_sched):
+    """``max_prefill_tokens_per_step`` caps what admission may consume of
+    a mixed cycle but must not change any request's tokens. Arrivals are
+    staggered so later admissions ride live decode cycles (zero-decode
+    cycles use the wide admission bucket and are exempt)."""
+    cfg, _ = model
+    # length-6 prompts ride mixed cycles in a 2-slot pool (the planner's
+    # cost model sends longer prompts to the wide stall bucket instead)
+    prompts = _prompts(cfg, 4, length=6)
+    # staggered retirement (mixed max_new) keeps decode live across the
+    # later admissions, forcing them through budgeted mixed cycles
+    arrivals = [0.0, 0.0, 1.0, 2.0]
+    max_news = [2, MAX_NEW, MAX_NEW, MAX_NEW]
+    baseline = []
+    for budget in (None, 2):
+        spec_sched.reset()
+        spec_sched.eos_id = None
+        spec_sched.max_prefill_tokens_per_step = budget
+        try:
+            reqs = [spec_sched.submit(p, max_new=mn, arrival=a)
+                    for p, mn, a in zip(prompts, max_news, arrivals)]
+            spec_sched.run()
+        finally:
+            spec_sched.max_prefill_tokens_per_step = None
+        assert spec_sched.stats["mixed_cycles"] > 0
+        peak = spec_sched.stats["peak_prefill_tokens_per_cycle"]
+        if budget is None:
+            baseline = [r.output for r in reqs]
+            assert peak > 2          # unbudgeted mixed cycles go wider
+        else:
+            assert [r.output for r in reqs] == baseline
+            assert 0 < peak <= budget
+
+
+def test_per_request_stop_tokens(model, spec_sched):
+    """A request's own ``stop_tokens`` retire it early without affecting
+    a same-prompt request that has none."""
+    cfg, _ = model
+    spec_sched.reset()
+    spec_sched.eos_id = None
+    p = _prompts(cfg, 1)[0]
+    probe = spec_sched.submit(p, max_new=MAX_NEW)
+    spec_sched.run()
+    stop = probe.output[2]
+
+    spec_sched.reset()
+    stopped = spec_sched.submit(p, max_new=MAX_NEW, stop_tokens=[stop])
+    free = spec_sched.submit(p, max_new=MAX_NEW)
+    spec_sched.run()
+    assert stopped.output == probe.output[:3]
+    assert stopped.output[-1] == stop
+    assert free.output == probe.output
+    # global eos composes with per-request stops: earliest one wins
+    spec_sched.reset()
+    spec_sched.eos_id = probe.output[1]
+    both = spec_sched.submit(p, max_new=MAX_NEW, stop_tokens=[stop])
+    spec_sched.run()
+    spec_sched.eos_id = None
+    assert both.output == probe.output[:2]
+
+
+def test_latency_accounting(model, spec_sched):
+    """Every delivered token carries a commit stamp; TTFT/ITL summaries
+    are well-formed and in cycle units."""
+    cfg, _ = model
+    spec_sched.reset()
+    spec_sched.eos_id = None
+    reqs = [spec_sched.submit(p, max_new=MAX_NEW, arrival=i / 2.0)
+            for i, p in enumerate(_prompts(cfg, 3))]
+    spec_sched.run()
+    for r in reqs:
+        assert len(r.token_cycles) == len(r.output) == len(r.token_walls)
+        assert r.ttft_cycles is not None and r.ttft_cycles > 0
+        assert (r.itl_cycles >= 0).all()
+    s = spec_sched.latency_summary()
+    assert s["ttft_cycles_p95"] >= s["ttft_cycles_p50"] > 0
+    assert s["itl_cycles_p95"] >= s["itl_cycles_p50"] >= 0
 
 
 def test_autoregressive_matches_speculative(model, spec_sched, auto_sched):
