@@ -21,8 +21,16 @@ layout must reserve the longest request's S_max for every row; paging
 reserves per-request blocks, so mixed lengths fit ≥1.5× more resident
 tokens at equal memory.
 
+``--prefix`` replays a prefix-reuse trace (70% of prompts share a
+``--prefix-header``-token header, staggered arrivals) through the paged
+scheduler with the radix prefix cache on and off. ``--prefix-gate``
+(nightly CI) hard-fails unless cache-on outputs are bitwise identical to
+cache-off, prefill tokens computed drop >= 40%, peak reserved residency
+is no worse, the full-prefix-hit request's TTFT beats its cold TTFT, and
+every jit step still compiles exactly once.
+
   PYTHONPATH=src python benchmarks/throughput.py [--trained] \
-      [--rates 1,4,16] [--fused-gate] [--paged] \
+      [--rates 1,4,16] [--fused-gate] [--paged] [--prefix-gate] \
       [--out /tmp/throughput.json]
 """
 import argparse
@@ -167,6 +175,105 @@ def run_paged_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     return out
 
 
+def run_prefix_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
+    """Prefix-reuse trace through the paged layout, cache on vs off.
+
+    70% of the requests share a ``--prefix-header``-token header (the
+    shared-system-prompt regime), the last of them a *full-prefix* hit
+    (header + 1 token). ``block_size`` and ``chunk_size`` are pinned to
+    the fused riding width γ+1, so every prefill pass in both runs is
+    γ+1 wide at block-aligned boundaries — warm-start passes are a
+    subset of the cold run's and outputs must be bitwise identical."""
+    gamma = args.gamma
+    block = gamma + 1
+    header_len = args.prefix_header - args.prefix_header % block
+    n = args.prefix_requests
+    key = jax.random.PRNGKey(args.seed + 3)
+    header = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 1000), (header_len,), 0, cfg.vocab_size))
+    prompts, sharer = [], []
+    for i in range(n):
+        # ~70% share the header; the last request is always the
+        # full-prefix hit (header + 1 token) the TTFT gate measures
+        if i % 10 < 7 or i == n - 1:
+            tail_len = 1 if i == n - 1 else 2 * block
+            tail = np.asarray(jax.random.randint(
+                jax.random.fold_in(key, i), (tail_len,), 0,
+                cfg.vocab_size))
+            prompts.append(np.concatenate([header, tail]))
+            sharer.append(True)
+        else:                              # 30% cold traffic
+            prompts.append(np.asarray(jax.random.randint(
+                jax.random.fold_in(key, i), (6 * block,), 0,
+                cfg.vocab_size)))
+            sharer.append(False)
+    s_max = header_len + 2 * block + args.max_new + gamma + 1
+    s_max += (-s_max) % block
+    out = {"header_tokens": header_len, "requests": n,
+           "block_size": block, "runs": {}}
+    outputs, ttfts = {}, {}
+    for mode in ("off", "on"):
+        sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
+                          num_slots=args.slots, s_max=s_max,
+                          rt_extra=rt_extra, paged=True, block_size=block,
+                          chunk_size=block, prefix_cache=mode == "on")
+        reqs = [sched.submit(p, max_new=args.max_new, arrival=4.0 * i)
+                for i, p in enumerate(prompts)]
+        t0 = time.time()
+        sched.run()
+        s = sched.summary()
+        s["wall_s"] = time.time() - t0
+        s["trace_counts"] = dict(sched.trace_counts)
+        out["runs"][mode] = s
+        outputs[mode] = [r.output for r in reqs]
+        ttfts[mode] = [r.ttft_cycles for r in reqs]
+        print(f"[prefix-compare:{mode:>3}] prefill tokens computed="
+              f"{s['prefill_tokens']}, hits={s['prefix_hits']}/"
+              f"{s['prefix_queries']}, matched={s['prefix_matched_tokens']}"
+              f" tok, cow={s['cow_copies']}, peak reserved="
+              f"{s['peak_reserved_tokens']} tok")
+        del sched
+    on, off = out["runs"]["on"], out["runs"]["off"]
+    out["outputs_identical"] = outputs["on"] == outputs["off"]
+    out["prefill_reduction"] = 1.0 - (on["prefill_tokens"]
+                                      / max(off["prefill_tokens"], 1))
+    out["full_hit_ttft_cycles"] = ttfts["on"][n - 1]
+    out["full_hit_cold_ttft_cycles"] = ttfts["off"][n - 1]
+    out["sharer_ttft_mean"] = float(np.mean(
+        [t for t, sh in zip(ttfts["on"], sharer) if sh]))
+    failures = []
+    if not out["outputs_identical"]:
+        failures.append("prefix cache is not lossless: cache-on outputs "
+                        "differ from cache-off")
+    if out["prefill_reduction"] < 0.40:
+        failures.append(
+            f"prefill tokens computed only dropped "
+            f"{out['prefill_reduction']:.0%} (< 40%) on the shared-header "
+            "trace")
+    if on["peak_reserved_tokens"] > off["peak_reserved_tokens"]:
+        failures.append(
+            f"residency regressed: peak reserved {on['peak_reserved_tokens']}"
+            f" tok with the cache vs {off['peak_reserved_tokens']} without")
+    if not (out["full_hit_ttft_cycles"] < out["full_hit_cold_ttft_cycles"]):
+        failures.append(
+            f"full-prefix-hit TTFT {out['full_hit_ttft_cycles']:.1f}cyc "
+            f"does not beat cold {out['full_hit_cold_ttft_cycles']:.1f}cyc")
+    for name, cnt in on["trace_counts"].items():
+        if cnt > 1:
+            failures.append(f"cache-on run traced step '{name}' {cnt}x — "
+                            "zero-recompile contract broken")
+    out["failures"] = failures
+    out["passed"] = not failures
+    print(f"[prefix-compare] prefill tokens {off['prefill_tokens']}→"
+          f"{on['prefill_tokens']} (-{out['prefill_reduction']:.0%}), "
+          f"full-hit ttft {out['full_hit_cold_ttft_cycles']:.1f}→"
+          f"{out['full_hit_ttft_cycles']:.1f}cyc, outputs identical: "
+          f"{out['outputs_identical']}")
+    for msg in failures:
+        print(f"[prefix-gate] FAIL: {msg}")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
@@ -190,6 +297,18 @@ def main(argv=None):
                     help="cycled prompt lengths for the --paged trace")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged KV block size (tokens per block)")
+    ap.add_argument("--prefix", action="store_true",
+                    help="also replay a prefix-reuse trace (70%% shared "
+                    "header) with the radix prefix cache on vs off")
+    ap.add_argument("--prefix-gate", action="store_true",
+                    help="fail the run unless the prefix cache is "
+                    "bitwise lossless, cuts prefill tokens >= 40%% on "
+                    "the shared-header trace, holds residency, and "
+                    "beats cold TTFT on a full-prefix hit (nightly gate)")
+    ap.add_argument("--prefix-header", type=int, default=64,
+                    help="shared header length for the --prefix trace")
+    ap.add_argument("--prefix-requests", type=int, default=10,
+                    help="requests in the --prefix trace")
     ap.add_argument("--trained", action="store_true",
                     help="use the cached 300-step smoke checkpoint "
                     "(realistic acceptance) instead of random init")
@@ -272,6 +391,9 @@ def main(argv=None):
     if args.paged:
         report["paged_compare"] = run_paged_compare(
             cfg, packed, cass, ecfg, args, rt_extra)
+    if args.prefix or args.prefix_gate:
+        report["prefix_compare"] = run_prefix_compare(
+            cfg, packed, cass, ecfg, args, rt_extra)
     byl = {(r["mode"], r["lambda"]): r for r in report["runs"]}
     for lam in rates:
         f, a, ar = (byl[("fused", lam)], byl[("alternating", lam)],
@@ -305,6 +427,8 @@ def main(argv=None):
     else:
         print(out)
     if args.paged and not report["paged_compare"]["passed"]:
+        raise SystemExit(1)
+    if args.prefix_gate and not report["prefix_compare"]["passed"]:
         raise SystemExit(1)
     if args.fused_gate and failures:
         raise SystemExit(1)

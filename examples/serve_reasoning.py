@@ -10,6 +10,14 @@ whole queue drains without ever recompiling or growing the cache. The
 scheduler runs the fused serving step: staggered admissions ride the
 resident requests' decode cycles instead of stalling them.
 
+A second scenario (``--no-prefix-demo`` to skip) serves eight requests
+that share a common system-prompt header through the paged scheduler with
+the radix prefix cache on and off: admission aliases the cached header
+blocks instead of re-prefilling them, so warm requests start mid-prompt
+(a full-prefix hit rides one decode-width cycle). The demo prints the
+hit rate, pool blocks saved, and per-request TTFT both ways — outputs
+are identical, the cache only removes redundant work.
+
   PYTHONPATH=src python examples/serve_reasoning.py [--arch llama3-8b]
 """
 import argparse
@@ -36,6 +44,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--gamma", type=int, default=5)
     ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--no-prefix-demo", dest="prefix_demo",
+                    action="store_false", default=True,
+                    help="skip the shared-system-prompt prefix-cache "
+                    "scenario")
     ap.add_argument("--no-stop-probe", dest="stop_probe",
                     action="store_false", default=True,
                     help="skip the stop-token demo (by default a probe "
@@ -105,6 +117,69 @@ def main():
           f"(c=0.33): {speedup_model(alpha, args.gamma, 0.33):.2f}x vs bf16")
     print("paper reference: acceptance 0.74–0.91 on trained 4–8B models "
           "→ 1.78–2.41x")
+
+    if args.prefix_demo:
+        prefix_demo(cfg, packed, cass, args)
+
+
+def prefix_demo(cfg, packed, cass, args):
+    """Shared-system-prompt scenario: 8 requests with a common header
+    through the paged scheduler, prefix cache on vs off."""
+    from repro.configs.base import layer_groups
+    if any(e[0] != "a" for g in layer_groups(cfg) for e in g.entries):
+        print(f"\n[prefix] skipping the prefix-cache scenario: "
+              f"{cfg.name} has SSM entries (recurrent state is "
+              "per-request and cannot be block-shared)")
+        return
+    # block == chunk == γ+1: every prefill pass in both runs is the fused
+    # riding width at block-aligned boundaries, so warm starts replay a
+    # subset of the cold run's passes — outputs stay bitwise identical
+    block = args.gamma + 1
+    max_new = min(args.max_new, 16)
+    header_blocks = 4
+    print(f"\n[prefix] shared system prompt: {args.requests} requests, "
+          f"common {header_blocks * block}-token header, paged "
+          f"(block={block}) …")
+    import jax
+    key = jax.random.PRNGKey(11)
+    header = np.asarray(jax.random.randint(
+        key, (header_blocks * block,), 0, cfg.vocab_size))
+    prompts = []
+    for i in range(args.requests):
+        # last request is a full-prefix hit: header + a single token
+        tail_len = 1 if i == args.requests - 1 else block
+        tail = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (tail_len,), 0, cfg.vocab_size))
+        prompts.append(np.concatenate([header, tail]))
+    s_max = len(header) + block + max_new + args.gamma + 1
+    s_max += (-s_max) % block
+    runs = {}
+    for mode in (False, True):
+        sched = Scheduler(cfg, packed, cass=cass,
+                          ecfg=EngineConfig(gamma=args.gamma),
+                          num_slots=args.slots, s_max=s_max,
+                          rt_extra={"ssm_chunk": 8}, paged=True,
+                          block_size=block, chunk_size=block,
+                          prefix_cache=mode)
+        reqs = [sched.submit(p, max_new=max_new, arrival=2.0 * i)
+                for i, p in enumerate(prompts)]
+        sched.run()
+        runs[mode] = ([r.output for r in reqs],
+                      [r.ttft_cycles for r in reqs], sched.summary())
+        del sched
+    outs_off, ttft_off, s_off = runs[False]
+    outs_on, ttft_on, s_on = runs[True]
+    assert outs_on == outs_off, "prefix cache must be lossless"
+    saved = s_on["prefix_blocks_aliased"]
+    print(f"hit rate={s_on['prefix_hit_rate']:.2f} "
+          f"({s_on['prefix_hits']}/{s_on['prefix_queries']} admissions), "
+          f"blocks saved={saved} (aliased instead of allocated), "
+          f"prefill computed {s_off['prefill_tokens']}→"
+          f"{s_on['prefill_tokens']} tok, outputs identical: True")
+    print("per-request TTFT (cycles), cache off → on:")
+    for i, (a, b) in enumerate(zip(ttft_off, ttft_on)):
+        tag = " (full-prefix hit)" if i == args.requests - 1 else ""
+        print(f"  req {i}: {a:5.1f} → {b:5.1f}{tag}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,20 @@ layout):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
       --variant 1 --scheduler --paged --block-size 16 --num-blocks 24 \
       --slots 4 --requests 8 --max-new 32
+
+``--prefix-cache`` (with ``--paged``) turns on prefix sharing: admission
+aliases cached prompt-prefix blocks into each row's block table instead
+of re-prefilling and re-storing them, and the run reports hit rate,
+matched tokens, and copy-on-write copies. ``--shared-header`` gives all
+requests a common header (half the prompt) so hits occur on this
+synthetic trace — it works with the cache off too, so the same trace can
+be replayed both ways and must print identical tokens (losslessness at
+the CLI). ``--prefix-cache-blocks`` caps how many evictable
+blocks the cache may park after their requests retire:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --variant 1 --scheduler --paged --prefix-cache --shared-header \
+      --block-size 8 --chunk-size 16 --slots 4 --requests 8 --max-new 32
 """
 from __future__ import annotations
 
@@ -85,6 +99,20 @@ def run(argv=None):
                     help="prefill chunk: prompts are prefilled in fixed "
                     "chunks of this many tokens so all admissions share "
                     "one compile bucket")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share cached prompt-prefix blocks across "
+                    "requests (radix index + copy-on-write; requires "
+                    "--paged)")
+    ap.add_argument("--shared-header", action="store_true",
+                    help="give all requests a common prompt header "
+                    "(half the prompt) so the prefix cache has "
+                    "something to hit; works with the cache off too, "
+                    "making losslessness observable at the CLI (same "
+                    "trace, same tokens, cache on or off)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=None,
+                    help="max evictable blocks the prefix cache may keep "
+                    "parked after their requests retire (default: "
+                    "bounded only by the pool)")
     ap.add_argument("--alternating", action="store_true",
                     help="use the prefill/decode-alternating scheduler "
                     "(the fused mixed-role step is the default)")
@@ -99,6 +127,9 @@ def run(argv=None):
     if args.paged and not args.scheduler:
         ap.error("--paged requires --scheduler (the fixed-batch engine "
                  "has no block pool)")
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache requires --paged (sharing aliases "
+                 "physical pool blocks through block tables)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)
@@ -108,6 +139,12 @@ def run(argv=None):
     prompt = {"tokens": jax.random.randint(
         jax.random.fold_in(key, 1), (b, args.prompt_len), 0,
         cfg.vocab_size)}
+    if args.shared_header:
+        # a shared system-prompt header (half the prompt) so the prefix
+        # cache has something to hit on this synthetic trace
+        header = prompt["tokens"][0, :args.prompt_len // 2]
+        prompt["tokens"] = prompt["tokens"].at[:, :header.shape[0]].set(
+            header[None, :])
     if cfg.frontend == "vision":
         prompt["patch_embeds"] = jnp.zeros(
             (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
@@ -144,7 +181,9 @@ def run(argv=None):
                           chunk_size=args.chunk_size,
                           fused=not args.alternating,
                           max_prefill_tokens_per_step=(
-                              args.max_prefill_tokens_per_step))
+                              args.max_prefill_tokens_per_step),
+                          prefix_cache=args.prefix_cache,
+                          prefix_cache_blocks=args.prefix_cache_blocks)
         t0 = time.time()
         for i in range(args.requests):
             # odd-numbered requests carry the per-request stop list; even
@@ -174,6 +213,14 @@ def run(argv=None):
                   f"{s['pool_high_water_blocks']} blocks, peak resident="
                   f"{s['peak_resident_tokens']} tok (reserved "
                   f"{s['peak_reserved_tokens']})")
+        if args.prefix_cache:
+            print(f"[prefix] hit rate={s['prefix_hit_rate']:.2f} "
+                  f"({s['prefix_hits']}/{s['prefix_queries']} admissions), "
+                  f"matched={s['prefix_matched_tokens']} tok, "
+                  f"aliased={s['prefix_blocks_aliased']} blocks, "
+                  f"cow={s['cow_copies']}, prefill computed="
+                  f"{s['prefill_tokens']} tok, parked now="
+                  f"{s['prefix_parked_blocks']} blocks")
         for r in sorted(done, key=lambda r: r.rid):
             print(f"  req {r.rid}: {len(r.output)} tokens, "
                   f"first {r.output[:8]}")

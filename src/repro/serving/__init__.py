@@ -1,7 +1,8 @@
-"""Serving: KV cache (Cassandra-packed), speculative engine, and the
-continuous-batching scheduler.
+"""Serving: KV cache (Cassandra-packed), speculative engine, the
+continuous-batching scheduler, and the prefix-sharing subsystem
+(``blockpool`` ref-counted blocks + ``prefixcache`` radix index).
 
 Import submodules explicitly (``repro.serving.engine``, ``….kvcache``,
-``….scheduler``) — this package init stays empty to avoid model↔serving
-import cycles.
+``….scheduler``, ``….prefixcache``) — this package init stays empty to
+avoid model↔serving import cycles.
 """

@@ -62,6 +62,71 @@ class EngineConfig:
     tie_margin: float = 0.0
 
 
+def validate_serving_knobs(cfg: ModelConfig, *, gamma: int, num_slots: int,
+                           s_max: int, chunk_size: int, fused: bool,
+                           speculative: bool, paged: bool, block_size: int,
+                           num_blocks: int | None, prefix_cache: bool,
+                           prefix_cache_blocks: int | None,
+                           max_prefill_tokens_per_step: int | None) -> None:
+    """Fail fast on inconsistent serving knobs.
+
+    Every check here used to surface as a jit-time shape error, a silent
+    perf inversion, or a mid-flight allocator assert; the scheduler (and
+    ``launch.serve``) call this once at startup so misconfiguration reads
+    as a one-line ``ValueError`` instead."""
+    if num_slots < 1:
+        raise ValueError(f"num_slots must be >= 1 (got {num_slots})")
+    if s_max < gamma + 2:
+        raise ValueError(
+            f"s_max={s_max} cannot hold even a 1-token prompt plus the "
+            f"γ+1={gamma + 1} speculative horizon")
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1 (got {chunk_size})")
+    if fused and speculative and chunk_size < gamma + 1:
+        raise ValueError(
+            f"chunk_size={chunk_size} < γ+1={gamma + 1}: the wide "
+            "admission bucket would prefill *slower* than riding fused "
+            "cycles, inverting the planner's cost model — raise "
+            "chunk_size or lower gamma")
+    if (max_prefill_tokens_per_step is not None
+            and max_prefill_tokens_per_step < 1):
+        raise ValueError(
+            "max_prefill_tokens_per_step must be >= 1 (or None): a "
+            "zero budget would strand prefilling rows forever")
+    if paged:
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1 (got {block_size})")
+        if num_blocks is not None and num_blocks < 2:
+            raise ValueError(
+                f"num_blocks={num_blocks}: the pool needs at least one "
+                "allocatable block besides the reserved trash block")
+    if prefix_cache_blocks is not None and not prefix_cache:
+        raise ValueError("prefix_cache_blocks is set but the prefix "
+                         "cache is off")
+    if prefix_cache:
+        if not paged:
+            raise ValueError(
+                "the prefix cache shares physical pool blocks through "
+                "block tables — it requires the paged layout (paged=True)")
+        if any(e[0] != "a" for g in layer_groups(cfg) for e in g.entries):
+            raise ValueError(
+                f"{cfg.name}: prefix caching requires pure-attention "
+                "archs — SSM recurrent state is per-request and cannot "
+                "be reconstructed from shared KV blocks")
+        if chunk_size % block_size != 0:
+            raise ValueError(
+                f"chunk_size={chunk_size} must be a multiple of "
+                f"block_size={block_size} when the prefix cache is on: "
+                "cache hits seed prefill at block boundaries, and "
+                "aligned chunks keep warm-start pass boundaries a subset "
+                "of the cold run's (the bitwise-identity condition)")
+        if num_blocks is not None and prefix_cache_blocks is not None \
+                and prefix_cache_blocks > num_blocks - 1:
+            raise ValueError(
+                f"prefix_cache_blocks={prefix_cache_blocks} exceeds the "
+                f"pool's {num_blocks - 1} allocatable blocks")
+
+
 # ---------------------------------------------------------------------------
 # Scratch (draft-side transient state)
 # ---------------------------------------------------------------------------

@@ -205,6 +205,31 @@ def append_batched(store, new_store, at: jax.Array,
     return append_paged_batched(store, new_store, table, at)
 
 
+def copy_pool_blocks(cache: dict, src: jax.Array, dst: jax.Array) -> dict:
+    """Device-side block copy ``pool[dst[i]] = pool[src[i]]`` in every
+    attention store leaf — the copy-on-write primitive.
+
+    A request that diverges inside a shared block receives a fresh block
+    from its own reservation and a copy of the shared block's contents
+    (plain or packed — the copy is leaf-wise and never decodes), then
+    overwrites from the divergence point. ``src``/``dst`` are *traced*
+    (K,) int32 operands padded with ``TRASH_BLOCK`` -> ``TRASH_BLOCK``
+    no-op pairs, so any number of copies per cycle hits one compile.
+    SSM entries are per-row recurrent state with no token axis — nothing
+    to copy (prefix caching is validated off for SSM archs)."""
+    def cp(leaf):                                  # (R, NB, BS, …)
+        return leaf.at[:, dst].set(leaf[:, src])
+    new_dec = []
+    for g in cache["dec"]:
+        gd = {}
+        for ekey, e in g.items():
+            gd[ekey] = e if "conv" in e else jax.tree.map(cp, e)
+        new_dec.append(gd)
+    out = dict(cache)
+    out["dec"] = new_dec
+    return out
+
+
 def append_paged_batched(store, new_store, table: jax.Array,
                          at: jax.Array) -> dict:
     """Scatter per-row token runs into the block pool through the table.

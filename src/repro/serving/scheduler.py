@@ -35,6 +35,17 @@ multiplexes a request queue through one jit'd serving step per cycle.
   A request *reserves* its worst-case blocks at admission (no mid-flight
   OOM) but blocks are allocated lazily as the sequence grows into them,
   so resident memory tracks actual tokens, not the S_max bound.
+* **Prefix sharing** (``prefix_cache=True``, paged only) — a host-side
+  radix index (``serving.prefixcache``) maps block-aligned prompt-prefix
+  runs to ref-counted physical blocks. Admission matches the longest
+  cached prefix, aliases the matched blocks into the row's table with
+  zero copies, seeds ``pos``/``length`` past the matched tokens, and
+  reserves only the *unshared* blocks; prefill then starts mid-prompt
+  (a full-prefix hit rides one γ+1-wide cycle — TTFT ≈ 1 cycle). A
+  request diverging inside a cached block gets a fresh block and one
+  device-side block copy (copy-on-write; shared blocks are never
+  written). Retired requests park their indexed blocks — resident but
+  evictable (LRU leaf order) the moment reservations need the space.
 * **Retirement** — per-row early exit on ``max_new``, the global
   ``eos_id``, or any of the request's own ``stop_tokens``; the slot (and
   its blocks, when paged) is freed immediately for the next request.
@@ -66,7 +77,8 @@ from repro.serving.blockpool import (BlockAllocator, TRASH_BLOCK,
                                      blocks_needed)
 from repro.serving.engine import (EngineConfig, autoregressive_step,
                                   chunk_prefill_step, spec_decode_step,
-                                  unified_step)
+                                  unified_step, validate_serving_knobs)
+from repro.serving.prefixcache import PrefixCache, PrefixMatch
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 
@@ -82,6 +94,7 @@ class Request:
     state: str = QUEUED
     slot: int = -1
     pos: int = 0                        # prompt tokens prefilled so far
+    prefix_matched: int = 0             # prompt tokens seeded from the cache
     prefill_done: bool = False
     output: list = dataclasses.field(default_factory=list)
     token_cycles: list = dataclasses.field(default_factory=list)
@@ -190,7 +203,9 @@ class Scheduler:
                  rt_extra: dict = {}, paged: bool = False,
                  block_size: int = 16, num_blocks: int | None = None,
                  chunk_size: int = 32, fused: bool = True,
-                 max_prefill_tokens_per_step: int | None = None):
+                 max_prefill_tokens_per_step: int | None = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_blocks: int | None = None):
         if cfg.frontend:
             raise NotImplementedError(
                 "scheduler admission is token-prompt only for now")
@@ -203,20 +218,29 @@ class Scheduler:
         # the fused step IS a speculative cycle; the autoregressive
         # baseline keeps the alternating prefill/decode loop
         self.fused = fused and speculative
-        if (max_prefill_tokens_per_step is not None
-                and max_prefill_tokens_per_step < 1):
-            raise ValueError(
-                "max_prefill_tokens_per_step must be >= 1 (or None): a "
-                "zero budget would strand prefilling rows forever")
-        self.max_prefill_tokens_per_step = max_prefill_tokens_per_step
-        self.rt = Runtime(cfg=cfg, cass=cass,
-                          view="target" if cass else "plain", **rt_extra)
-        packed = cass is not None
+        # validate on the raw knobs BEFORE deriving pool sizes, so e.g.
+        # block_size=0 reads as a ValueError, not a ZeroDivisionError
+        # (the default-pool prefix_cache_blocks bound is re-checked by
+        # PrefixCache against the resolved pool capacity)
+        validate_serving_knobs(
+            cfg, gamma=ecfg.gamma, num_slots=num_slots, s_max=s_max,
+            chunk_size=chunk_size, fused=self.fused,
+            speculative=speculative, paged=paged, block_size=block_size,
+            num_blocks=num_blocks, prefix_cache=prefix_cache,
+            prefix_cache_blocks=prefix_cache_blocks,
+            max_prefill_tokens_per_step=max_prefill_tokens_per_step)
         if paged:
             self.max_blocks = blocks_needed(s_max, block_size)
             # default pool: capacity-equivalent to the slot layout (+trash)
             self.num_blocks = (num_blocks if num_blocks is not None
                                else num_slots * self.max_blocks + 1)
+        self.max_prefill_tokens_per_step = max_prefill_tokens_per_step
+        self.prefix_cache_enabled = prefix_cache
+        self.prefix_cache_blocks = prefix_cache_blocks
+        self.rt = Runtime(cfg=cfg, cass=cass,
+                          view="target" if cass else "plain", **rt_extra)
+        packed = cass is not None
+        if paged:
             self.cache = KC.init_paged_cache(
                 cfg, cass, num_slots, self.num_blocks, block_size,
                 self.max_blocks, packed=packed)
@@ -236,6 +260,13 @@ class Scheduler:
             "chunk", partial(_masked_chunk, self.rt))
         self._unified = self._jit_step(
             "unified", partial(_masked_unified, self.rt, ecfg=ecfg))
+
+        def counted_cow(cache, src, dst):
+            self.trace_counts["cow"] = self.trace_counts.get("cow", 0) + 1
+            return KC.copy_pool_blocks(cache, src, dst)
+        # copy-on-write block copies; src/dst are traced (slots,) vectors
+        # padded with trash->trash no-ops, so the step compiles once
+        self._cow = jax.jit(counted_cow, donate_argnums=(0,))
         self._reset_state()
 
     def _jit_step(self, name: str, fn):
@@ -258,18 +289,33 @@ class Scheduler:
                       "peak_prefill_tokens_per_cycle": 0, "committed": 0,
                       "accepted": 0, "drafted": 0, "admitted": 0,
                       "finished": 0, "peak_resident_tokens": 0,
-                      "peak_reserved_tokens": 0}
+                      "peak_reserved_tokens": 0, "prefix_queries": 0,
+                      "prefix_hits": 0, "prefix_matched_tokens": 0,
+                      "prefix_blocks_aliased": 0, "cow_copies": 0}
         self._next_rid = 0
+        self.prefix: PrefixCache | None = None
+        self._pending_cow: list[tuple[int, int]] = []
         if self.paged:
             self.pool = BlockAllocator(self.num_blocks)
             self.table = np.full((self.num_slots, self.max_blocks),
                                  TRASH_BLOCK, np.int32)
+            # per-slot logical->physical block lists (shared prefix blocks
+            # first, then blocks charged to the slot's reservation)
+            self.row_blocks: list[list[int]] = \
+                [[] for _ in range(self.num_slots)]
+            # per-slot (trie node, block index) insert watermark so
+            # incremental prefix indexing never re-walks committed blocks
+            self.row_index: list[tuple] = [(None, 0)] * self.num_slots
+            if self.prefix_cache_enabled:
+                self.prefix = PrefixCache(self.pool, self.block_size,
+                                          self.prefix_cache_blocks)
 
     def reset(self) -> None:
         """Clear queue/slots/stats for a fresh run reusing the compiled
         steps — admission re-prefills over a slot's region (or re-points
         its block table), so stale cache contents from the previous run
-        are harmless."""
+        are harmless. The prefix index is rebuilt empty (the pool's
+        previous contents are never matched)."""
         self._reset_state()
 
     # -- queue -------------------------------------------------------------
@@ -309,24 +355,81 @@ class Scheduler:
             len(req.tokens) + req.max_new + self.ecfg.gamma + 1,
             self.block_size)
 
-    def _admit(self, req: Request, slot: int) -> None:
+    def _admission_plan(self, req: Request
+                        ) -> tuple[int, PrefixMatch | None, int]:
+        """(blocks to reserve, cached-prefix match, parked blocks the
+        admission would pin). The reservation charges only *unshared*
+        blocks: fully-matched prefix blocks are aliased, not allocated.
+        The copy-on-write block of a partial match IS charged (it is a
+        private divergence copy)."""
+        need = self._request_blocks(req)
+        if self.prefix is None:
+            return need, None, 0
+        m = self.prefix.match(req.tokens)
+        pinned = list(m.nodes)
+        if m.partial is not None and m.partial_len > 0:
+            pinned.append(m.partial)
+        pins = sum(1 for n in pinned if self.pool.is_parked(n.block))
+        return need - len(m.nodes), m, pins
+
+    def _admit(self, req: Request, slot: int,
+               plan: tuple[int, PrefixMatch | None, int] | None) -> None:
         req.state, req.slot, req.admitted_at = RUNNING, slot, self.clock
         req.pos, req.prefill_done, req.output = 0, False, []
+        req.prefix_matched = 0
         req.token_cycles, req.token_walls = [], []
         self.slots[slot] = req
         self.lengths[slot] = 0
         if self.paged:
+            n_reserve, m, _ = plan
             # reservations are keyed by slot, not rid: slots are unique
             # while occupied, whereas callers may reuse rids
-            self.pool.reserve(slot, self._request_blocks(req))
+            self.pool.reserve(slot, n_reserve)
             self.table[slot, :] = TRASH_BLOCK
+            blocks: list[int] = []
+            if m is not None:
+                self.stats["prefix_queries"] += 1
+                for node in m.nodes:
+                    self.pool.share(slot, node.block)
+                    blocks.append(node.block)
+                matched = m.full_tokens
+                self.stats["prefix_blocks_aliased"] += len(m.nodes)
+                if m.partial is not None and m.partial_len > 0:
+                    # diverges inside a cached block: pin the source for
+                    # the row's lifetime (it must survive until the copy
+                    # lands) and take a fresh block to diverge in
+                    self.pool.share(slot, m.partial.block)
+                    dst = self.pool.cow(slot, m.partial.block)
+                    self._pending_cow.append((m.partial.block, dst))
+                    blocks.append(dst)
+                    matched += m.partial_len
+                    self.stats["cow_copies"] += 1
+                if matched:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_matched_tokens"] += matched
+                # seed the row past the matched tokens: prefill starts
+                # mid-prompt, and a full-prefix hit rides one decode-width
+                # cycle (TTFT ~ 1 cycle) instead of re-prefilling
+                req.pos = req.prefix_matched = matched
+                self.lengths[slot] = matched
+            self.row_blocks[slot] = blocks
+            # the matched chain is already indexed: start incremental
+            # insertion at its tail (the CoW block, if any, is indexed
+            # once prefill fills it)
+            if self.prefix is not None:
+                self.row_index[slot] = (
+                    m.nodes[-1] if m.nodes else None, len(m.nodes))
+            if blocks:
+                self.table[slot, :len(blocks)] = blocks
         self.stats["admitted"] += 1
 
     def _admit_ready(self) -> None:
         """FIFO among *ready* requests — a future arrival queued ahead
         must not head-of-line-block one that is already due. When paged,
-        the head-of-line request also gates on pool reservation; it waits
-        (rather than being skipped) so small requests cannot starve it."""
+        the head-of-line request also gates on pool reservation (its
+        unshared blocks plus any parked cache blocks it would pin); it
+        waits (rather than being skipped) so small requests cannot
+        starve it."""
         for slot in range(self.num_slots):
             if self.slots[slot] is not None:
                 continue
@@ -335,11 +438,13 @@ class Scheduler:
             if idx is None:
                 break
             req = self.queue[idx]
-            if self.paged and not self.pool.can_reserve(
-                    self._request_blocks(req)):
-                break
+            plan = None
+            if self.paged:
+                plan = self._admission_plan(req)
+                if not self.pool.can_reserve(plan[0], plan[2]):
+                    break
             del self.queue[idx]
-            self._admit(req, slot)
+            self._admit(req, slot, plan)
 
     # -- retirement --------------------------------------------------------
 
@@ -363,7 +468,11 @@ class Scheduler:
         req.state, req.finished_at = FINISHED, self.clock
         self.slots[req.slot] = None
         if self.paged:
+            # refcounted release: blocks shared with other rows stay live,
+            # blocks the prefix cache indexed are parked (evictable), the
+            # rest return to the free list
             self.pool.release(req.slot)
+            self.row_blocks[req.slot] = []
             self.table[req.slot, :] = TRASH_BLOCK
         self.finished.append(req)
         self.stats["finished"] += 1
@@ -405,12 +514,47 @@ class Scheduler:
 
     def _grow_blocks(self, req: Request, n_tokens: int) -> None:
         """Allocate pool blocks until ``req`` covers ``n_tokens`` and map
-        them into its table row (within its admission reservation)."""
-        self.pool.grow_to(req.slot, n_tokens, self.block_size)
-        blocks = self.pool.blocks_of(req.slot)
+        them into its table row (within its admission reservation).
+        Shared prefix blocks occupy the head of the row's logical list;
+        only the unshared tail draws on the reservation."""
+        blocks = self.row_blocks[req.slot]
+        while len(blocks) * self.block_size < n_tokens:
+            blocks.append(self.pool.alloc(req.slot))
         self.table[req.slot, :len(blocks)] = blocks
 
+    def _flush_cow(self) -> None:
+        """Dispatch pending copy-on-write block copies (device-side, one
+        fixed-width jit step; trash->trash pairs pad the batch). Runs
+        before the cycle's serving step so a diverging row's seeded
+        tokens are resident before anything reads them."""
+        k = self.num_slots
+        while self._pending_cow:
+            batch, self._pending_cow = (self._pending_cow[:k],
+                                        self._pending_cow[k:])
+            src = np.full(k, TRASH_BLOCK, np.int32)
+            dst = np.full(k, TRASH_BLOCK, np.int32)
+            for i, (s, d) in enumerate(batch):
+                src[i], dst[i] = s, d
+            self.cache = self._cow(self.cache, jnp.asarray(src),
+                                   jnp.asarray(dst))
+
+    def _index_prefix(self, req: Request) -> None:
+        """Register the row's newly-committed full prompt blocks in the
+        radix cache (incremental: resumes from the slot's watermark)."""
+        if self.prefix is None:
+            return
+        slot = req.slot
+        node, start = self.row_index[slot]
+        node, _ = self.prefix.insert(req.tokens, self.row_blocks[slot],
+                                     req.pos, node=node, start=start)
+        # the returned node's depth, not pos//block_size, is the resume
+        # point: insert may have stopped early (foreign identical run)
+        # or restarted from the root (stale hint)
+        self.row_index[slot] = (node, node.depth)
+
     def _push_host_state(self) -> None:
+        if self._pending_cow:
+            self._flush_cow()
         self.cache["length"] = jnp.asarray(self.lengths, jnp.int32)
         if self.paged:
             self.cache["block_table"] = jnp.asarray(self.table)
@@ -422,8 +566,12 @@ class Scheduler:
             self.stats["peak_resident_tokens"], resident)
         if self.paged:
             # reserved (not merely allocated) blocks are the honest
-            # memory-held figure: a reservation is unusable by anyone else
-            reserved = self.pool.reserved_total * self.block_size
+            # memory-held figure: a reservation is unusable by anyone
+            # else, as is a shared block that outlived its reservation
+            # (uncharged). Parked cache blocks are excluded — they are
+            # reclaimable on demand.
+            reserved = (self.pool.reserved_total
+                        + self.pool.uncharged_total) * self.block_size
         else:
             reserved = sum(r is not None for r in self.slots) * self.s_max
         self.stats["peak_reserved_tokens"] = max(
@@ -450,6 +598,8 @@ class Scheduler:
         for r in prefilling:
             r.pos += int(valid[r.slot])
             self.lengths[r.slot] += int(valid[r.slot])
+            self.stats["prefill_tokens"] += int(valid[r.slot])
+            self._index_prefix(r)
             if r.pos >= len(r.tokens):
                 self._finish_prefill(r, last[r.slot])
         self.stats["prefill_cycles"] += 1
@@ -561,6 +711,7 @@ class Scheduler:
                 r.pos += v
                 self.lengths[r.slot] += v
                 self.stats["prefill_tokens"] += v
+                self._index_prefix(r)
                 if r.pos >= len(r.tokens):
                     self._finish_prefill(r, last[r.slot])
             self.stats["prefill_cycles"] += 1
@@ -693,4 +844,9 @@ class Scheduler:
             s["pool_blocks"] = self.pool.capacity
             s["pool_high_water_blocks"] = self.pool.high_water
             s["block_size"] = self.block_size
+        if self.prefix is not None:
+            s["prefix_hit_rate"] = (s["prefix_hits"]
+                                    / max(s["prefix_queries"], 1))
+            s["prefix_cached_blocks"] = len(self.prefix)
+            s["prefix_parked_blocks"] = self.pool.parked_total
         return s

@@ -1,5 +1,6 @@
-"""Paged KV cache: block-allocator invariants and bit-exact packed-store
-round-trips through a block table.
+"""Paged KV cache: block-allocator invariants (including prefix-sharing
+refcounts / copy-on-write / eviction), bit-exact packed-store round-trips
+through a block table, and the radix prefix index.
 
 Each property has a shared checker driven two ways: hypothesis explores
 arbitrary traffic when it is installed (CI), and a deterministic seeded
@@ -15,6 +16,7 @@ from repro.core.format import CassandraConfig
 from repro.serving import kvcache as KC
 from repro.serving.blockpool import (BlockAllocator, TRASH_BLOCK,
                                      blocks_needed)
+from repro.serving.prefixcache import PrefixCache
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -101,6 +103,139 @@ if HAVE_HYPOTHESIS:
         n = blocks_needed(n_tokens, block_size)
         assert n * block_size >= n_tokens
         assert (n - 1) * block_size < n_tokens
+
+
+def _random_share_ops(rng, n):
+    kinds = ["admit", "grow", "share", "cow", "cache", "retire"]
+    return [(kinds[rng.integers(len(kinds))], int(rng.integers(8)),
+             int(rng.integers(8))) for _ in range(n)]
+
+
+def _check_share_trace(num_blocks, ops):
+    """Arbitrary admit/grow/share/CoW/cache/retire traffic over the
+    refcounted allocator: no block is ever freed (or parked) while its
+    refcount is > 0, CoW always diverges into a fresh block without
+    touching the source's refcount, free-list conservation holds with the
+    parked set included, and the reservation guarantee never breaks."""
+    pool = BlockAllocator(num_blocks)
+    # stand-in for the prefix cache's eviction policy: surrender the
+    # oldest parked block when an allocation finds the free list empty
+    pool.evictor = lambda: pool.drop_cached(next(iter(pool._parked)))
+    live: list[int] = []
+    reserved: dict[int, int] = {}
+    next_owner = 0
+    for kind, v, w in ops:
+        if kind == "admit":
+            need = v % 4 + 1
+            if pool.can_reserve(need):
+                pool.reserve(next_owner, need)
+                reserved[next_owner] = need
+                live.append(next_owner)
+                next_owner += 1
+            else:
+                with pytest.raises(ValueError):
+                    pool.reserve(next_owner, need)
+        elif kind == "grow" and live:
+            owner = live[v % len(live)]
+            if len(pool.blocks_of(owner)) < reserved[owner]:
+                blk = pool.alloc(owner)
+                assert blk != TRASH_BLOCK
+                assert pool.refcount(blk) == 1
+        elif kind == "share" and live:
+            owner = live[v % len(live)]
+            cands = sorted(set(pool._refs) | set(pool._parked))
+            if cands:
+                blk = cands[w % len(cands)]
+                before = pool.refcount(blk)
+                overcommit = (pool.is_parked(blk)
+                              and not pool.can_reserve(0, extra_pins=1))
+                if overcommit:
+                    with pytest.raises(ValueError):
+                        pool.share(owner, blk)
+                else:
+                    pool.share(owner, blk)
+                    assert pool.refcount(blk) == before + 1
+                    assert not pool.is_parked(blk)
+        elif kind == "cow" and live:
+            owner = live[v % len(live)]
+            cands = sorted(set(pool._refs) | set(pool._parked))
+            if cands and len(pool.blocks_of(owner)) < reserved[owner]:
+                src = cands[w % len(cands)]
+                if pool.is_parked(src) and not pool._free:
+                    continue    # a real caller pins src first (the
+                                # alloc's eviction could pick it)
+                before = pool.refcount(src)
+                dst = pool.cow(owner, src)
+                # CoW diverges into a fresh private block; the shared
+                # source is untouched (its refcount does not change)
+                assert dst != src and pool.refcount(dst) == 1
+                assert pool.refcount(src) == before
+        elif kind == "cache" and (pool._refs or pool._parked):
+            cands = sorted(set(pool._refs) | set(pool._parked))
+            pool.mark_cacheable(cands[v % len(cands)])
+        elif kind == "retire" and live:
+            owner = live.pop(v % len(live))
+            held = (list(pool.blocks_of(owner))
+                    + list(pool._shared[owner]))
+            dropped = pool.release(owner)
+            del reserved[owner]
+            # only blocks whose refcount really hit zero were surrendered
+            for blk in dropped:
+                assert pool.refcount(blk) == 0
+            for blk in held:
+                if blk not in dropped:
+                    assert pool.refcount(blk) >= 1
+        pool.check_invariants()
+    # full drain: every block refcount reaches zero; the pool conserves
+    # capacity across the parked/free split
+    for owner in list(live):
+        pool.release(owner)
+    pool.check_invariants()
+    assert pool.allocated_total == 0 and pool.reserved_total == 0
+    assert pool.parked_total + len(pool._free) == pool.capacity
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_share_trace_seeded(seed):
+    rng = np.random.default_rng(seed + 100)
+    _check_share_trace(int(rng.integers(2, 25)),
+                       _random_share_ops(rng, 80))
+
+
+if HAVE_HYPOTHESIS:
+    SHARE_OPS = st.lists(
+        st.tuples(st.sampled_from(["admit", "grow", "share", "cow",
+                                   "cache", "retire"]),
+                  st.integers(0, 7), st.integers(0, 7)),
+        min_size=1, max_size=80)
+
+    @needs_hypothesis
+    @given(st.integers(2, 24), SHARE_OPS)
+    @settings(**SETTINGS)
+    def test_share_trace_property(num_blocks, ops):
+        _check_share_trace(num_blocks, ops)
+
+
+def test_share_refcount_lifecycle():
+    """A shared block survives its charging owner's release and frees
+    only when the last sharer retires; cacheable blocks park instead."""
+    pool = BlockAllocator(6)
+    pool.reserve("a", 2)
+    pool.reserve("b", 1)
+    blk = pool.alloc("a")
+    pool.share("b", blk)
+    assert pool.refcount(blk) == 2
+    assert pool.release("a") == []           # b still holds blk
+    assert pool.refcount(blk) == 1
+    assert pool.uncharged_total == 1         # live but reservation-free
+    pool.check_invariants()
+    pool.mark_cacheable(blk)
+    assert pool.release("b") == [blk]
+    assert pool.is_parked(blk)               # cached, evictable — not free
+    pool.check_invariants()
+    pool.drop_cached(blk)
+    assert not pool.is_parked(blk) and pool.refcount(blk) == 0
+    pool.check_invariants()
 
 
 def test_allocator_basics():
@@ -198,3 +333,192 @@ def test_plain_roundtrip_and_trash_isolation(seed):
     np.testing.assert_array_equal(
         np.asarray(KC.gather_store(pool, TABLE)[0], np.float32),
         np.asarray(view[0], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Device-side copy-on-write
+# ---------------------------------------------------------------------------
+
+
+def _leaves(store):
+    return [np.asarray(x) for x in jax.tree.leaves(store)]
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_copy_pool_blocks_cow_never_mutates_source(packed):
+    """``copy_pool_blocks`` duplicates a block bit-exactly (plain and
+    packed streams), trash->trash pad pairs are no-ops, and diverging in
+    the copy never mutates the shared source block."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (1, BS, HKV, D), jnp.float32) \
+        .astype(jnp.bfloat16)
+    if packed:
+        pool = _empty_pool()
+    else:
+        pool = jnp.zeros((NB, BS, HKV, D), jnp.bfloat16)
+    src_blk, dst_blk = 2, 5
+    table = jnp.asarray([[src_blk]], jnp.int32)
+    pool = KC.append_paged_batched(
+        pool, _encode(x) if packed else x, table, jnp.zeros(1, jnp.int32))
+    # wrap as a minimal (R, NB, BS, …) cache so copy_pool_blocks applies
+    cache = {"dec": [{"e0": jax.tree.map(lambda c: c[None], pool)}]}
+    src = jnp.asarray([src_blk, TRASH_BLOCK], jnp.int32)
+    dst = jnp.asarray([dst_blk, TRASH_BLOCK], jnp.int32)
+    out = KC.copy_pool_blocks(cache, src, dst)["dec"][0]["e0"]
+    out = jax.tree.map(lambda c: c[0], out)
+    for a, b in zip(_leaves(out), _leaves(pool)):
+        np.testing.assert_array_equal(a[dst_blk], a[src_blk])   # copied
+        np.testing.assert_array_equal(a[src_blk], b[src_blk])   # intact
+        np.testing.assert_array_equal(a[TRASH_BLOCK], b[TRASH_BLOCK])
+    # diverge in the copy: overwrite the copied block's tail through a
+    # table pointing at dst — the shared source must not change
+    y = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, HKV, D),
+                          jnp.float32).astype(jnp.bfloat16)
+    dtable = jnp.asarray([[dst_blk]], jnp.int32)
+    after = KC.append_paged_batched(
+        out, _encode(y) if packed else y, dtable,
+        jnp.full(1, BS - 2, jnp.int32))
+    for a, b in zip(_leaves(after), _leaves(pool)):
+        np.testing.assert_array_equal(a[src_blk], b[src_blk])
+    got = KC.gather_store(after, dtable)
+    want = KC.gather_store(out, table)
+    if packed:
+        got = KC.read_store(CASS, got, D, "target", BOOK)
+        want = KC.read_store(CASS, want, D, "target", BOOK)
+        yd = KC.read_store(CASS, _encode(y), D, "target", BOOK)
+    else:
+        yd = y
+    # copied head survives, divergence point onward holds the new tokens
+    np.testing.assert_array_equal(np.asarray(got[0, :BS - 2], np.float32),
+                                  np.asarray(want[0, :BS - 2], np.float32))
+    np.testing.assert_array_equal(np.asarray(got[0, BS - 2:], np.float32),
+                                  np.asarray(yd[0], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Radix prefix index
+# ---------------------------------------------------------------------------
+
+PBS = 2          # prefix-cache tests use tiny 2-token blocks
+
+
+def _prefixed_pool(num_blocks=10, cap=None):
+    pool = BlockAllocator(num_blocks)
+    return pool, PrefixCache(pool, PBS, max_blocks=cap)
+
+
+def _admit_chain(pool, cache, owner, tokens, n_blocks):
+    """Reserve + allocate + index ``n_blocks`` full blocks of ``tokens``
+    the way scheduler admission/prefill does."""
+    m = cache.match(tokens)
+    pool.reserve(owner, n_blocks - len(m.nodes))
+    blocks = []
+    for node in m.nodes:
+        pool.share(owner, node.block)
+        blocks.append(node.block)
+    while len(blocks) < n_blocks:
+        blocks.append(pool.alloc(owner))
+    cache.insert(tokens, blocks, n_blocks * PBS)
+    return m, blocks
+
+
+def test_prefix_match_insert_and_dedup():
+    pool, cache = _prefixed_pool()
+    toks = np.arange(1, 9)                        # 4 full blocks
+    m0, blocks = _admit_chain(pool, cache, "a", toks, 3)
+    assert m0.tokens == 0 and len(cache) == 3
+    cache.check_invariants()
+    # same prompt again: full-block match, capped at len(prompt)-1
+    m1 = cache.match(toks)
+    assert [n.block for n in m1.nodes] == blocks
+    assert m1.full_tokens == 6 and m1.partial is None
+    # shorter query: cap at len-1 turns the last block into a partial hit
+    m2 = cache.match(toks[:4])
+    assert m2.full_tokens == 2
+    assert m2.partial is not None and m2.partial_len == 1
+    # diverging mid-block yields a partial (copy-on-write) candidate
+    div = np.array([1, 2, 3, 99, 5])
+    m3 = cache.match(div)
+    assert m3.full_tokens == 2 and m3.partial_len == 1
+    # a duplicate insert with different physical blocks keeps the
+    # existing nodes (the duplicate stays private, never indexed)
+    pool.reserve("b", 3)
+    dup = [pool.alloc("b") for _ in range(3)]
+    assert cache.insert(toks, dup, 6)[1] == 0
+    assert len(cache) == 3
+    cache.check_invariants()
+    pool.check_invariants()
+
+
+def test_prefix_incremental_insert_watermark():
+    """insert() resumes from a (node, start) watermark — the scheduler
+    indexes each prefill chunk without re-walking committed blocks —
+    and a stale hint (node evicted since) restarts from the root."""
+    pool, cache = _prefixed_pool()
+    toks = np.arange(1, 11)                        # 5 full blocks
+    pool.reserve("a", 5)
+    blocks = [pool.alloc("a") for _ in range(5)]
+    node, added = cache.insert(toks, blocks, 4)
+    assert added == 2
+    node2, added2 = cache.insert(toks, blocks, 10, node=node, start=2)
+    assert added2 == 3 and len(cache) == 5
+    cache.check_invariants()
+    # stale hint: park the chain, evict the deepest node, resume from it
+    pool.release("a")
+    cache.evict_lru()
+    assert node2.detached and len(cache) == 4
+    pool.reserve("b", 5)
+    blocks_b = [pool.alloc("b") for _ in range(5)]
+    node3, added3 = cache.insert(toks, blocks_b, 10, node=node2, start=5)
+    # restart walks from the root and STOPS at the first identical run
+    # held by someone else's block: b's copies stay private — indexing
+    # them under a chain b does not pin would break the monotone
+    # refcount property leaf-first eviction relies on
+    assert added3 == 0 and len(cache) == 4
+    assert node3 is cache.root
+    cache.check_invariants()
+    pool.check_invariants()
+
+
+def test_prefix_park_evict_lru_leaf_first():
+    pool, cache = _prefixed_pool(num_blocks=8)
+    toks_a = np.arange(1, 9)
+    _, blocks_a = _admit_chain(pool, cache, "a", toks_a, 3)
+    pool.release("a")
+    assert pool.parked_total == 3                 # parked, not freed
+    # a new owner needing the whole pool forces eviction: leaves go
+    # first (deepest block), roots last
+    pool.reserve("b", 7)
+    got = [pool.alloc("b") for _ in range(7)]
+    assert len(set(got)) == 7
+    assert pool.parked_total == 0 and len(cache) == 0
+    pool.check_invariants()
+    cache.check_invariants()
+
+
+def test_prefix_pinned_chain_not_evictable():
+    pool, cache = _prefixed_pool(num_blocks=6)
+    toks = np.arange(1, 9)
+    _, blocks = _admit_chain(pool, cache, "a", toks, 3)
+    pool.release("a")
+    m, _ = _admit_chain(pool, cache, "b", toks, 3)  # re-pins the chain
+    assert m.full_tokens == 6
+    # nothing is evictable while b pins the chain: draining the free
+    # list then over-allocating must fail, not evict pinned blocks
+    pool.reserve("c", pool.capacity - pool.allocated_total)
+    for _ in range(pool.capacity - pool.allocated_total):
+        pool.alloc("c")
+    with pytest.raises(ValueError):
+        pool.alloc("c")
+    assert len(cache) == 3
+    pool.check_invariants()
+
+
+def test_prefix_cache_cap_enforced_on_park():
+    pool, cache = _prefixed_pool(num_blocks=10, cap=2)
+    toks = np.arange(1, 11)
+    _admit_chain(pool, cache, "a", toks, 4)
+    pool.release("a")                      # parks 4, cap 2 -> evict 2 LRU
+    assert pool.parked_total == 2 and len(cache) == 2
+    cache.check_invariants()
+    pool.check_invariants()

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import init_params
+from repro.serving.blockpool import blocks_needed
 from repro.serving.engine import EngineConfig
 from repro.serving.scheduler import FINISHED, Scheduler
 
@@ -444,6 +445,219 @@ def test_latency_accounting(model, spec_sched):
     s = spec_sched.latency_summary()
     assert s["ttft_cycles_p95"] >= s["ttft_cycles_p50"] > 0
     assert s["itl_cycles_p95"] >= s["itl_cycles_p50"] >= 0
+
+
+# -- prefix sharing ----------------------------------------------------------
+
+
+def _shared_header_trace(cfg, gamma, seed=21):
+    """Prompts for the prefix-cache tests: a common 3-block header, four
+    sharers with unique tails, one cold prompt, one mid-block divergence
+    (copy-on-write), and a final full-prefix hit."""
+    bs = gamma + 1
+    key = jax.random.PRNGKey(seed)
+    header = np.asarray(jax.random.randint(key, (3 * bs,), 0,
+                                           cfg.vocab_size))
+    tails = [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                           (bs + 1,), 0, cfg.vocab_size))
+             for i in range(4)]
+    cold = np.asarray(jax.random.randint(jax.random.fold_in(key, 9),
+                                         (2 * bs,), 0, cfg.vocab_size))
+    prompts = [np.concatenate([header, t]) for t in tails]
+    prompts.append(cold)
+    # diverges inside sharer 0's first tail block -> partial match (CoW)
+    div = np.concatenate([header, tails[0][:bs - 1],
+                          (tails[0][bs - 1:bs] + 1) % cfg.vocab_size])
+    prompts.append(div)
+    prompts.append(np.concatenate([header, tails[0][:1]]))  # full hit
+    return prompts
+
+
+def _run_prefix_trace(cfg, params, prompts, cass=None, paged=True,
+                      prefix=False, gamma=GAMMA, max_new=MAX_NEW):
+    bs = gamma + 1
+    s_max = max(len(p) for p in prompts) + max_new + gamma + 1
+    s_max += (-s_max) % bs
+    sched = Scheduler(cfg, params, cass=cass, ecfg=EngineConfig(gamma=gamma),
+                      num_slots=2, s_max=s_max, rt_extra={"ssm_chunk": 8},
+                      paged=paged, block_size=bs, chunk_size=bs,
+                      prefix_cache=prefix)
+    reqs = [sched.submit(p, max_new=max_new, arrival=2.0 * i)
+            for i, p in enumerate(prompts)]
+    sched.run()
+    return sched, reqs
+
+
+def test_prefix_cache_lossless_and_wins(model):
+    """The tentpole's losslessness pin: per-request outputs with the
+    prefix cache on are bitwise identical to cache-off runs on BOTH
+    layouts (slot and paged), while admission really shares: cached
+    header blocks are aliased, a mid-block divergence takes the
+    copy-on-write path, the full-prefix hit skips its header's prefill
+    and beats the cold run's TTFT, and every step still compiles once.
+    block == chunk == γ+1 keeps every prefill pass the fused riding
+    width at block-aligned boundaries, so warm starts replay a subset
+    of the cold run's passes."""
+    cfg, params = model
+    prompts = _shared_header_trace(cfg, GAMMA)
+    outs, ttfts, scheds = {}, {}, {}
+    for mode in ("slot", "paged", "prefix"):
+        sched, reqs = _run_prefix_trace(
+            cfg, params, prompts, paged=mode != "slot",
+            prefix=mode == "prefix")
+        outs[mode] = [r.output for r in reqs]
+        ttfts[mode] = [r.ttft_cycles for r in reqs]
+        scheds[mode] = sched
+    assert outs["prefix"] == outs["paged"] == outs["slot"]
+    on, off = scheds["prefix"], scheds["paged"]
+    s = on.summary()
+    assert s["prefix_hits"] >= 4                  # sharers + div + full hit
+    assert s["prefix_blocks_aliased"] >= 8
+    assert s["cow_copies"] >= 1                   # the mid-block divergence
+    assert s["prefill_tokens"] < off.summary()["prefill_tokens"]
+    # the full-prefix hit (last request) skips its header entirely
+    assert ttfts["prefix"][-1] < ttfts["paged"][-1]
+    # zero recompiles: one trace per step, CoW included
+    assert all(c == 1 for c in on.trace_counts.values()), on.trace_counts
+    assert on.trace_counts["unified"] == 1
+    # drained pool: nothing live, cached blocks parked (not leaked)
+    assert on.pool.allocated_total == 0 and on.pool.reserved_total == 0
+    assert on.pool.parked_total > 0
+    on.pool.check_invariants()
+    on.prefix.check_invariants()
+
+
+@pytest.mark.slow
+def test_prefix_cache_reuses_pool_capacity(model):
+    """Sharing must show up as pool capacity: the same shared-header
+    trace holds strictly fewer reserved-peak tokens with the cache on,
+    and a pool too small for the cache-off trace still serves it with
+    sharing (aliased headers draw no reservation)."""
+    cfg, params = model
+    prompts = _shared_header_trace(cfg, GAMMA)
+    peaks = {}
+    for prefix in (False, True):
+        sched, reqs = _run_prefix_trace(cfg, params, prompts,
+                                        prefix=prefix)
+        assert all(len(r.output) >= MAX_NEW for r in reqs)
+        peaks[prefix] = sched.summary()["peak_reserved_tokens"]
+    assert peaks[True] < peaks[False]
+
+
+@pytest.mark.slow
+def test_prefix_cache_lossless_packed(model):
+    """Same pin on the Cassandra-packed store: sharing aliases packed
+    blocks (spec + verif streams) without decoding them, and outputs
+    stay bitwise identical to the cache-off packed run."""
+    from repro.core.format import CassandraConfig
+    from repro.core.packing import format_params
+    cfg, params = model
+    cass = CassandraConfig(variant=1, gamma=GAMMA)
+    packed = format_params(params, cass)
+    prompts = _shared_header_trace(cfg, GAMMA)
+    outs = {}
+    for prefix in (False, True):
+        sched, reqs = _run_prefix_trace(cfg, packed, prompts, cass=cass,
+                                        prefix=prefix, max_new=4)
+        outs[prefix] = [r.output for r in reqs]
+        if prefix:
+            assert sched.summary()["prefix_hits"] >= 4
+    assert outs[True] == outs[False]
+
+
+def test_prefix_cache_tiny_pool_waits_not_corrupts(model):
+    """Eviction under pressure: a pool sized well below the trace's
+    total footprint must still serve every request to completion —
+    cached blocks are surrendered LRU-leaf-first when reservations need
+    the space, never while a row still pins them."""
+    cfg, params = model
+    bs = GAMMA + 1
+    prompts = _shared_header_trace(cfg, GAMMA)
+    s_max = max(len(p) for p in prompts) + MAX_NEW + GAMMA + 1
+    s_max += (-s_max) % bs
+    sched = Scheduler(cfg, params, cass=None,
+                      ecfg=EngineConfig(gamma=GAMMA), num_slots=2,
+                      s_max=s_max, rt_extra={"ssm_chunk": 8}, paged=True,
+                      block_size=bs, chunk_size=bs,
+                      num_blocks=2 * blocks_needed(s_max, bs) + 2,
+                      prefix_cache=True)
+    reqs = [sched.submit(p, max_new=MAX_NEW, arrival=float(i))
+            for i, p in enumerate(prompts)]
+    done = sched.run()
+    assert len(done) == len(reqs)
+    assert all(len(r.output) >= MAX_NEW for r in reqs)
+    assert sched.pool.allocated_total == 0
+    sched.pool.check_invariants()
+    sched.prefix.check_invariants()
+
+
+def test_serving_knob_validation(model):
+    """Inconsistent serving knobs fail at construction with ValueErrors,
+    not jit-time shape errors or silent planner inversions."""
+    cfg, params = model
+
+    def mk(**kw):
+        kw.setdefault("rt_extra", {"ssm_chunk": 8})
+        kw.setdefault("num_slots", 2)
+        kw.setdefault("s_max", S_MAX)
+        return Scheduler(cfg, params, ecfg=EngineConfig(gamma=GAMMA), **kw)
+
+    with pytest.raises(ValueError, match="chunk_size"):
+        mk(chunk_size=GAMMA)                  # wide bucket < riding width
+    with pytest.raises(ValueError, match="paged"):
+        mk(prefix_cache=True)                 # prefix sharing needs paging
+    with pytest.raises(ValueError, match="multiple of"):
+        mk(paged=True, prefix_cache=True, block_size=4, chunk_size=6)
+    with pytest.raises(ValueError, match="allocatable"):
+        mk(paged=True, prefix_cache=True, block_size=GAMMA + 1,
+           chunk_size=GAMMA + 1, num_blocks=8, prefix_cache_blocks=9)
+    with pytest.raises(ValueError, match="prefix_cache_blocks"):
+        mk(prefix_cache_blocks=4)             # cap without the cache
+    with pytest.raises(ValueError, match="max_prefill_tokens_per_step"):
+        mk(max_prefill_tokens_per_step=0)
+    with pytest.raises(ValueError, match="s_max"):
+        mk(s_max=GAMMA + 1)
+    ssm_cfg = get_config("falcon-mamba-7b", smoke=True)
+    with pytest.raises(ValueError, match="SSM"):
+        Scheduler(ssm_cfg, None, ecfg=EngineConfig(gamma=GAMMA),
+                  num_slots=2, s_max=S_MAX, paged=True, prefix_cache=True,
+                  block_size=GAMMA + 1, chunk_size=GAMMA + 1)
+
+
+# -- MoE serving parity ------------------------------------------------------
+
+
+def test_moe_fused_matches_alternating_trace():
+    """ROADMAP follow-up: expert-capacity overflow couples rows in ANY
+    masked batched step, so bitwise fused==alternating on MoE archs
+    needs a capacity factor that provably never overflows. With
+    factor=4 (>= n_experts/top_k = 2), per-expert capacity covers every
+    token routing to one expert, so overflow cannot fire and the
+    row-coupling caveat documented in ``unified_step`` is inert — the
+    fused mixed-role trace must then match the alternating reference
+    bit-for-bit on a real MoE config."""
+    cfg = get_config("dbrx-132b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    # capacity c = t*k/e*factor + 1 >= t for factor >= e/k: no overflow
+    rt_extra = {"ssm_chunk": 8, "moe_capacity_factor": 4.0}
+    key = jax.random.PRNGKey(13)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(key, i), (int(ln),), 0, cfg.vocab_size))
+        for i, ln in enumerate([7, 4, 6, 3])]
+    outs = []
+    for fused in (True, False):
+        sched = Scheduler(cfg, params, cass=None,
+                          ecfg=EngineConfig(gamma=GAMMA),
+                          num_slots=2, s_max=S_MAX, rt_extra=rt_extra,
+                          fused=fused, chunk_size=GAMMA + 1)
+        reqs = [sched.submit(p, max_new=4, arrival=i / 2.0)
+                for i, p in enumerate(prompts)]
+        sched.run()
+        assert all(r.done for r in reqs)
+        if fused:
+            assert sched.stats["mixed_cycles"] > 0
+        outs.append([r.output for r in reqs])
+    assert outs[0] == outs[1]
 
 
 def test_autoregressive_matches_speculative(model, spec_sched, auto_sched):
