@@ -29,9 +29,18 @@ cache-off, prefill tokens computed drop >= 40%, peak reserved residency
 is no worse, the full-prefix-hit request's TTFT beats its cold TTFT, and
 every jit step still compiles exactly once.
 
+``--oversub`` replays an oversubscription trace (long background
+generations + late short interactive arrivals) through a pool sized to
+``--oversub-frac`` (~60%) of the measured peak residency, preemption +
+host swap on vs off. ``--swap-gate`` (nightly CI) hard-fails unless
+preempt-then-resume outputs are bitwise identical to a big-pool run, at
+least one preemption fires, the queue head's TTFT beats the
+no-preemption wait, host-spilled bytes are honestly reported, and every
+jit step (spill/restore included) compiles exactly once.
+
   PYTHONPATH=src python benchmarks/throughput.py [--trained] \
       [--rates 1,4,16] [--fused-gate] [--paged] [--prefix-gate] \
-      [--out /tmp/throughput.json]
+      [--swap-gate] [--out /tmp/throughput.json]
 """
 import argparse
 import json
@@ -274,6 +283,138 @@ def run_prefix_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     return out
 
 
+def run_oversub_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
+    """Oversubscription trace through three pool configurations.
+
+    The trace is the preemption regime: two long background generations
+    (priority 0) admitted first, then short interactive requests
+    (priority 1 — the latency tier preemption exists to protect)
+    arriving while the long rows are mid-generation. Three runs:
+
+    * **big** — pool comfortably above peak residency (reference outputs
+      + the peak-high-water measurement that sizes the tight pool)
+    * **tight** — pool at ``--oversub-frac`` (default ~60%) of the
+      measured peak, swap OFF: the queue head waits behind the slowest
+      resident generation (the no-preemption TTFT baseline)
+    * **swap** — the same tight pool, swap ON: the victim policy spills
+      a long row to the host store and admits the head immediately
+
+    ``--swap-gate`` hard-fails unless: swap-run outputs are bitwise
+    identical to the big-pool run, at least one preemption actually
+    fired, the first interactive request's TTFT with swap beats the
+    no-preemption wait, swapped bytes are reported (honest residency:
+    host-side spill is accounted, never netted against the pool), and
+    every jit step still compiled exactly once (spill/restore included).
+
+    ``block_size == chunk_size == γ+1`` pins every prefill pass to the
+    riding width at block-aligned boundaries, so preempt-then-resume
+    replays the exact pass schedule of the uninterrupted run — the same
+    alignment argument the prefix-cache gate uses."""
+    gamma = args.gamma
+    block = gamma + 1
+    key = jax.random.PRNGKey(args.seed + 4)
+    n_long, n_short = 2, max(args.oversub_requests - 2, 2)
+    long_new = 4 * args.max_new
+    prompts, max_news, arrivals, prios = [], [], [], []
+    for i in range(n_long):
+        prompts.append(np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (2 * block,), 0, cfg.vocab_size)))
+        max_news.append(long_new)
+        arrivals.append(0.0)
+        prios.append(0)
+    for i in range(n_short):
+        prompts.append(np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 100 + i), (2 * block,), 0,
+            cfg.vocab_size)))
+        max_news.append(args.max_new)
+        # arrive once the long rows are mid-generation, spaced out so
+        # each admission finds the pool full of long-row blocks
+        arrivals.append(4.0 + 3.0 * i)
+        prios.append(1)
+    s_max = 2 * block + long_new + gamma + 1
+    s_max += (-s_max) % block
+    head = n_long                       # the first interactive request
+
+    def one_run(num_blocks, swap):
+        sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
+                          num_slots=args.slots, s_max=s_max,
+                          rt_extra=rt_extra, paged=True, block_size=block,
+                          chunk_size=block, num_blocks=num_blocks,
+                          swap=swap)
+        reqs = [sched.submit(p, max_new=mn, arrival=a, priority=pr)
+                for p, mn, a, pr in zip(prompts, max_news, arrivals,
+                                        prios)]
+        t0 = time.time()
+        sched.run()
+        s = sched.summary()
+        s["wall_s"] = time.time() - t0
+        s["num_blocks"] = num_blocks
+        s["trace_counts"] = dict(sched.trace_counts)
+        outs = [r.output for r in reqs]
+        ttfts = [r.ttft_cycles for r in reqs]
+        del sched
+        return s, outs, ttfts
+
+    from repro.serving.blockpool import blocks_needed
+    per_req = blocks_needed(2 * block + long_new + gamma + 1, block)
+    big_blocks = args.slots * blocks_needed(s_max, block) + 1
+    big, big_outs, big_ttfts = one_run(big_blocks, swap=False)
+    # size the tight pool at ~oversub-frac of the measured peak, but
+    # never below one request's worst-case chain (submit would reject)
+    tight_blocks = max(int(big["pool_high_water_blocks"]
+                           * args.oversub_frac), per_req) + 1
+    tight, tight_outs, tight_ttfts = one_run(tight_blocks, swap=False)
+    swap, swap_outs, swap_ttfts = one_run(tight_blocks, swap=True)
+    out = {"block_size": block, "requests": len(prompts),
+           "head_request": head,
+           "big_pool_blocks": big_blocks,
+           "tight_pool_blocks": tight_blocks,
+           "peak_high_water_blocks": big["pool_high_water_blocks"],
+           "runs": {"big": big, "tight": tight, "swap": swap}}
+    out["outputs_identical"] = swap_outs == big_outs
+    out["tight_outputs_identical"] = tight_outs == big_outs
+    out["head_ttft_big"] = big_ttfts[head]
+    out["head_ttft_no_preempt"] = tight_ttfts[head]
+    out["head_ttft_swap"] = swap_ttfts[head]
+    print(f"[oversub] pool {big_blocks}->{tight_blocks} blocks "
+          f"({args.oversub_frac:.0%} of peak {big['pool_high_water_blocks']}"
+          f"), preemptions={swap['preemptions']} "
+          f"(resumes={swap['swap_resumes']}), spilled "
+          f"{swap['swap_out_blocks']} blocks out / "
+          f"{swap['swap_in_blocks']} restored, peak swapped="
+          f"{swap['peak_swapped_tokens']} tok "
+          f"({swap['spill_peak_bytes'] / 1e6:.3f}MB host)")
+    print(f"[oversub] queue-head TTFT: big={big_ttfts[head]:.1f}cyc, "
+          f"no-preemption={tight_ttfts[head]:.1f}cyc, "
+          f"swap={swap_ttfts[head]:.1f}cyc "
+          f"(outputs identical to big pool: {out['outputs_identical']})")
+    failures = []
+    if not out["outputs_identical"]:
+        failures.append("preempt-then-resume is not lossless: swap-run "
+                        "outputs differ from the big-pool run")
+    if swap["preemptions"] < 1:
+        failures.append("the oversubscribed trace never preempted — the "
+                        "tight pool is not actually oversubscribed")
+    if not (out["head_ttft_swap"] < out["head_ttft_no_preempt"]):
+        failures.append(
+            f"queue-head TTFT with swap ({out['head_ttft_swap']:.1f}cyc) "
+            f"does not beat the no-preemption wait "
+            f"({out['head_ttft_no_preempt']:.1f}cyc)")
+    if swap["swap_out_blocks"] < 1 or swap["spill_peak_bytes"] <= 0:
+        failures.append("no KV bytes ever spilled — every victim was "
+                        "zero-progress, so the swap path (spill/restore "
+                        "device steps, host accounting) went unexercised")
+    for name, cnt in swap["trace_counts"].items():
+        if cnt > 1:
+            failures.append(f"swap run traced step '{name}' {cnt}x — "
+                            "zero-recompile contract broken")
+    out["failures"] = failures
+    out["passed"] = not failures
+    for msg in failures:
+        print(f"[swap-gate] FAIL: {msg}")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
@@ -305,6 +446,22 @@ def main(argv=None):
                     "bitwise lossless, cuts prefill tokens >= 40%% on "
                     "the shared-header trace, holds residency, and "
                     "beats cold TTFT on a full-prefix hit (nightly gate)")
+    ap.add_argument("--oversub", action="store_true",
+                    help="also replay an oversubscription trace (pool "
+                    "sized to a fraction of the measured peak residency) "
+                    "with preemption + host swap on vs off")
+    ap.add_argument("--swap-gate", action="store_true",
+                    help="fail the run unless preempt-then-resume is "
+                    "bitwise lossless on the oversubscribed trace, >=1 "
+                    "preemption fires, the queue head's TTFT beats the "
+                    "no-preemption wait, swapped bytes are reported, and "
+                    "every step compiles exactly once (nightly gate)")
+    ap.add_argument("--oversub-frac", type=float, default=0.6,
+                    help="tight-pool size as a fraction of the big-pool "
+                    "run's measured peak residency")
+    ap.add_argument("--oversub-requests", type=int, default=6,
+                    help="requests in the --oversub trace (2 long "
+                    "background + the rest short interactive)")
     ap.add_argument("--prefix-header", type=int, default=64,
                     help="shared header length for the --prefix trace")
     ap.add_argument("--prefix-requests", type=int, default=10,
@@ -394,6 +551,9 @@ def main(argv=None):
     if args.prefix or args.prefix_gate:
         report["prefix_compare"] = run_prefix_compare(
             cfg, packed, cass, ecfg, args, rt_extra)
+    if args.oversub or args.swap_gate:
+        report["oversub_compare"] = run_oversub_compare(
+            cfg, packed, cass, ecfg, args, rt_extra)
     byl = {(r["mode"], r["lambda"]): r for r in report["runs"]}
     for lam in rates:
         f, a, ar = (byl[("fused", lam)], byl[("alternating", lam)],
@@ -429,6 +589,8 @@ def main(argv=None):
     if args.paged and not report["paged_compare"]["passed"]:
         raise SystemExit(1)
     if args.prefix_gate and not report["prefix_compare"]["passed"]:
+        raise SystemExit(1)
+    if args.swap_gate and not report["oversub_compare"]["passed"]:
         raise SystemExit(1)
     if args.fused_gate and failures:
         raise SystemExit(1)

@@ -35,6 +35,17 @@ layout):
       --variant 1 --scheduler --paged --block-size 16 --num-blocks 24 \
       --slots 4 --requests 8 --max-new 32
 
+``--swap`` (with ``--paged``) turns on preemption + host swap-out, so
+the pool can be oversubscribed: shrink ``--num-blocks`` below the trace's
+footprint and the scheduler swaps long-running victims' KV blocks to a
+host spill store instead of making the queue head wait behind them
+(``--swap-store-blocks`` caps host residency). Preempt-then-resume is
+lossless — the same trace with a big pool prints identical tokens:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \\
+      --variant 1 --scheduler --paged --swap --block-size 4 \\
+      --num-blocks 12 --slots 2 --requests 6 --max-new 32
+
 ``--prefix-cache`` (with ``--paged``) turns on prefix sharing: admission
 aliases cached prompt-prefix blocks into each row's block table instead
 of re-prefilling and re-storing them, and the run reports hit rate,
@@ -113,6 +124,19 @@ def run(argv=None):
                     help="max evictable blocks the prefix cache may keep "
                     "parked after their requests retire (default: "
                     "bounded only by the pool)")
+    ap.add_argument("--swap", action="store_true",
+                    help="preemption + host swap-out: oversubscribe the "
+                    "pool — when the queue head cannot reserve, swap a "
+                    "resident victim's KV blocks to a host spill store "
+                    "and admit immediately (requires --paged)")
+    ap.add_argument("--swap-store-blocks", type=int, default=None,
+                    help="max pool blocks the host spill store may hold "
+                    "(default: unbounded); a full store stops preemption, "
+                    "never drops a chain")
+    ap.add_argument("--priority", type=int, action="append", default=None,
+                    help="per-request priority (repeatable, cycled over "
+                    "requests): higher admitted first, lower preempted "
+                    "first; default 0 keeps plain FIFO")
     ap.add_argument("--alternating", action="store_true",
                     help="use the prefill/decode-alternating scheduler "
                     "(the fused mixed-role step is the default)")
@@ -130,6 +154,9 @@ def run(argv=None):
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged (sharing aliases "
                  "physical pool blocks through block tables)")
+    if args.swap and not args.paged:
+        ap.error("--swap requires --paged (preemption spills and "
+                 "restores pool blocks through block tables)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)
@@ -183,14 +210,19 @@ def run(argv=None):
                           max_prefill_tokens_per_step=(
                               args.max_prefill_tokens_per_step),
                           prefix_cache=args.prefix_cache,
-                          prefix_cache_blocks=args.prefix_cache_blocks)
+                          prefix_cache_blocks=args.prefix_cache_blocks,
+                          swap=args.swap,
+                          swap_store_blocks=args.swap_store_blocks)
         t0 = time.time()
         for i in range(args.requests):
             # odd-numbered requests carry the per-request stop list; even
             # ones run to max_new (per-request conditions, not global EOS)
+            prio = (args.priority[i % len(args.priority)]
+                    if args.priority else 0)
             sched.submit(prompt["tokens"][i % b], max_new=args.max_new,
                          arrival=i / 4.0,
-                         stop_tokens=args.stop_token if i % 2 else None)
+                         stop_tokens=args.stop_token if i % 2 else None,
+                         priority=prio)
         done = sched.run()
         dt = time.time() - t0
         s = sched.summary()
@@ -213,6 +245,15 @@ def run(argv=None):
                   f"{s['pool_high_water_blocks']} blocks, peak resident="
                   f"{s['peak_resident_tokens']} tok (reserved "
                   f"{s['peak_reserved_tokens']})")
+        if args.swap:
+            print(f"[swap] preemptions={s['preemptions']} "
+                  f"(resumes={s['swap_resumes']}), spilled="
+                  f"{s['swap_out_blocks']} blocks out / "
+                  f"{s['swap_in_blocks']} restored / "
+                  f"{s['swap_matched_blocks']} re-aliased from the "
+                  f"prefix cache, peak swapped="
+                  f"{s['peak_swapped_tokens']} tok "
+                  f"({s['spill_peak_bytes'] / 1e6:.2f}MB host)")
         if args.prefix_cache:
             print(f"[prefix] hit rate={s['prefix_hit_rate']:.2f} "
                   f"({s['prefix_hits']}/{s['prefix_queries']} admissions), "

@@ -1,8 +1,10 @@
 """Serving: KV cache (Cassandra-packed), speculative engine, the
-continuous-batching scheduler, and the prefix-sharing subsystem
-(``blockpool`` ref-counted blocks + ``prefixcache`` radix index).
+continuous-batching scheduler, the prefix-sharing subsystem
+(``blockpool`` ref-counted blocks + ``prefixcache`` radix index), and
+the preemption/swap subsystem (``blockpool`` SWAPPED state +
+``swapstore`` host spill store).
 
 Import submodules explicitly (``repro.serving.engine``, ``….kvcache``,
-``….scheduler``, ``….prefixcache``) — this package init stays empty to
-avoid model↔serving import cycles.
+``….scheduler``, ``….prefixcache``, ``….swapstore``) — this package
+init stays empty to avoid model↔serving import cycles.
 """

@@ -34,6 +34,28 @@ capacity``: *uncharged* counts live blocks no reservation covers (their
 charging owner released while sharers remain). Parked blocks never appear
 in the gate — they are reclaimable on demand — which is exactly what lets
 the reservation discipline charge only a request's **unshared** blocks.
+
+Preemption (``serving.swapstore`` + the scheduler's victim policy) adds a
+fourth lifecycle verb pair on top of reserve/alloc/share/release:
+
+* **swap_out(owner, key, logical)** — the owner's physical blocks leave
+  the pool exactly as ``release`` would surrender them (shared blocks
+  drop a pin and stay live for their other holders or park for the
+  prefix cache; private cacheable blocks park; the rest free) and its
+  reservation is dropped, but the *logical* chain is recorded under
+  ``key`` as SWAPPED: the row still exists, its KV bytes live host-side
+  in a ``SpillStore``, and it holds **zero** gate capacity — that is the
+  oversubscription: more admitted rows than the pool can hold resident.
+* **swap_in(key, owner, n)** — the swapped row returns: its key leaves
+  the SWAPPED set and a fresh reservation is taken for ``owner`` (the
+  slot it resumes in), gated like any admission. The caller then
+  re-aliases whatever prefix blocks the radix cache still holds and
+  restores the spilled private tail into newly allocated blocks.
+
+``key`` is a per-preemption token, NOT the slot: slots are recycled by
+other requests while a victim is swapped out, so the SWAPPED identity
+must outlive slot reuse. Invariant: a swapped key holds no reservation,
+no charged blocks and no pins — its entire footprint is host-side.
 """
 from __future__ import annotations
 
@@ -65,6 +87,7 @@ class BlockAllocator:
         self._shared: dict[object, list[int]] = {}  # pinned, not charged
         self._parked: dict[int, None] = {}       # refcount-0 cached blocks
         self._cacheable: set[int] = set()        # park (not free) on ref->0
+        self._swapped: dict[object, int] = {}    # swap key -> logical blocks
         # set by the prefix cache: () -> None, must move >=1 parked block
         # to the free list (drop_cached) or raise
         self.evictor = None
@@ -105,6 +128,17 @@ class BlockAllocator:
         reservation does."""
         return (self.reserved_total + self.uncharged_total + extra_pins + n
                 <= self.capacity)
+
+    @property
+    def swapped_total(self) -> int:
+        """Swapped-out rows (keys) whose chains live host-side."""
+        return len(self._swapped)
+
+    @property
+    def swapped_blocks_total(self) -> int:
+        """Logical blocks of all swapped rows — the oversubscription depth
+        (these tokens are admitted but hold zero pool capacity)."""
+        return sum(self._swapped.values())
 
     def refcount(self, blk: int) -> int:
         return self._refs.get(blk, 0)
@@ -206,6 +240,45 @@ class BlockAllocator:
         del self._reserved[owner]
         return dropped
 
+    def swap_out(self, owner, key, logical_blocks: int) -> list[int]:
+        """Preempt ``owner``: surrender its physical blocks and
+        reservation exactly like ``release``, but record ``key`` as
+        SWAPPED holding ``logical_blocks`` logical blocks host-side.
+
+        The caller must have spilled the owner's private block contents
+        BEFORE this call — freed blocks are immediately reallocatable.
+        Returns the blocks whose refcount reached zero (the ones whose
+        device bytes are now unreachable except via the spill copy)."""
+        if key in self._swapped:
+            raise ValueError(f"swap key {key!r} is already swapped out")
+        if logical_blocks < 0:
+            raise ValueError("logical_blocks must be >= 0")
+        dropped = self.release(owner)
+        self._swapped[key] = logical_blocks
+        return dropped
+
+    def swap_in(self, key, owner, n: int) -> None:
+        """Re-admit a swapped row: drop ``key`` from the SWAPPED set and
+        take a fresh reservation of ``n`` blocks for ``owner`` (the slot
+        the row resumes in), through the ordinary admission gate."""
+        if key not in self._swapped:
+            raise ValueError(f"swap key {key!r} is not swapped out")
+        self.reserve(owner, n)
+        del self._swapped[key]
+
+    def is_swapped(self, key) -> bool:
+        return key in self._swapped
+
+    def swapped_keys(self) -> list:
+        return list(self._swapped)
+
+    def drop_swapped(self, key) -> None:
+        """A swapped row retired without resuming (e.g. scheduler reset):
+        forget its key."""
+        if key not in self._swapped:
+            raise ValueError(f"swap key {key!r} is not swapped out")
+        del self._swapped[key]
+
     def _decref(self, blk: int) -> bool:
         self._refs[blk] -= 1
         if self._refs[blk] > 0:
@@ -263,6 +336,14 @@ class BlockAllocator:
             "reservation guarantee violated (pool can deadlock)"
         assert TRASH_BLOCK not in live and TRASH_BLOCK not in free \
             and TRASH_BLOCK not in parked
+        # SWAPPED rows hold zero pool capacity: their keys are disjoint
+        # from every owner that reserves/charges/pins
+        for key in self._swapped:
+            assert key not in self._reserved, \
+                "swapped key holds a reservation"
+            assert key not in self._owned and key not in self._shared, \
+                "swapped key still holds blocks"
+        assert all(n >= 0 for n in self._swapped.values())
 
 
 def blocks_needed(n_tokens: int, block_size: int) -> int:

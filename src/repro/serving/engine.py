@@ -42,6 +42,7 @@ from repro.core.format import CassandraConfig
 from repro.models import model as M
 from repro.models.layers import Runtime
 from repro.serving import kvcache as KC
+from repro.serving.blockpool import blocks_needed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +68,9 @@ def validate_serving_knobs(cfg: ModelConfig, *, gamma: int, num_slots: int,
                            speculative: bool, paged: bool, block_size: int,
                            num_blocks: int | None, prefix_cache: bool,
                            prefix_cache_blocks: int | None,
-                           max_prefill_tokens_per_step: int | None) -> None:
+                           max_prefill_tokens_per_step: int | None,
+                           swap: bool = False,
+                           swap_store_blocks: int | None = None) -> None:
     """Fail fast on inconsistent serving knobs.
 
     Every check here used to surface as a jit-time shape error, a silent
@@ -125,6 +128,27 @@ def validate_serving_knobs(cfg: ModelConfig, *, gamma: int, num_slots: int,
             raise ValueError(
                 f"prefix_cache_blocks={prefix_cache_blocks} exceeds the "
                 f"pool's {num_blocks - 1} allocatable blocks")
+    if swap_store_blocks is not None and not swap:
+        raise ValueError("swap_store_blocks is set but preemption/swap "
+                         "is off")
+    if swap:
+        if not paged:
+            raise ValueError(
+                "preemption/swap spills and restores pool blocks through "
+                "block tables — it requires the paged layout (paged=True)")
+        if any(e[0] != "a" for g in layer_groups(cfg) for e in g.entries):
+            raise ValueError(
+                f"{cfg.name}: preemption requires pure-attention archs — "
+                "SSM recurrent state lives per-slot (no pool axis), and a "
+                "recycled slot would clobber the victim's state")
+        if swap_store_blocks is not None and block_size >= 1:
+            row_blocks = blocks_needed(s_max, block_size)
+            if swap_store_blocks < row_blocks:
+                raise ValueError(
+                    f"swap_store_blocks={swap_store_blocks} cannot hold "
+                    f"even one full row chain ({row_blocks} blocks at "
+                    f"s_max={s_max}, block_size={block_size}) — no victim "
+                    "would ever be eligible")
 
 
 # ---------------------------------------------------------------------------

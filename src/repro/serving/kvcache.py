@@ -230,6 +230,58 @@ def copy_pool_blocks(cache: dict, src: jax.Array, dst: jax.Array) -> dict:
     return out
 
 
+def spill_pool_blocks(cache: dict, blocks: jax.Array) -> list:
+    """Gather ``pool[blocks]`` out of every attention store leaf — the
+    device→host half of KV swap-out.
+
+    ``blocks`` is a *traced* (K,) int32 operand padded with
+    ``TRASH_BLOCK`` entries, so any spill size up to K hits one compile
+    (the scheduler's K is the per-row block-table width — one bucket
+    serves every preemption). Returns a pytree mirroring ``cache["dec"]``
+    with attention leaves (R, K, BS, …): a bit-copy of the spilled
+    blocks' contents, plain or packed alike (the gather never decodes).
+    The caller ``device_get``s the result into a ``SpillStore`` BEFORE
+    the allocator frees the blocks for reuse. SSM entries are skipped —
+    recurrent state has no pool axis (swap is validated off for SSM
+    archs)."""
+    out = []
+    for g in cache["dec"]:
+        gd = {}
+        for ekey, e in g.items():
+            if "conv" in e:
+                continue
+            gd[ekey] = jax.tree.map(lambda leaf: leaf[:, blocks], e)
+        out.append(gd)
+    return out
+
+
+def restore_pool_blocks(cache: dict, blocks: jax.Array, data: list) -> dict:
+    """Scatter spilled block contents back: ``pool[blocks[i]] = data[i]``
+    in every attention store leaf — the host→device half of KV swap-in.
+
+    ``data`` is the (R, K, BS, …) pytree ``spill_pool_blocks`` produced
+    (host-padded with zeros past the real blocks); ``blocks`` is again a
+    traced trash-padded (K,) int32 vector, so every restore reuses the
+    one compiled step. Padded entries scatter into the trash block,
+    which holds garbage by contract. Restored bytes are bit-identical to
+    the spilled ones, so a resumed row's attention sees exactly the
+    cache it had when preempted."""
+    new_dec = []
+    for g, gd in zip(cache["dec"], data):
+        gout = {}
+        for ekey, e in g.items():
+            if "conv" in e:
+                gout[ekey] = e
+            else:
+                gout[ekey] = jax.tree.map(
+                    lambda leaf, d: leaf.at[:, blocks].set(
+                        d.astype(leaf.dtype)), e, gd[ekey])
+        new_dec.append(gout)
+    out = dict(cache)
+    out["dec"] = new_dec
+    return out
+
+
 def append_paged_batched(store, new_store, table: jax.Array,
                          at: jax.Array) -> dict:
     """Scatter per-row token runs into the block pool through the table.

@@ -36,6 +36,17 @@ into *sharing*:
 ``SchedulerPrefixStats`` live in ``scheduler.Scheduler.stats``:
 ``prefix_queries/hits/matched_tokens``, ``prefix_blocks_aliased`` (pool
 blocks a request mapped without allocating) and ``cow_copies``.
+
+Interplay with preemption (``scheduler`` ``swap=True``): a swapped-out
+victim's indexed blocks park through the ordinary ``release`` path — they
+stay matchable, so the victim's *resume* re-aliases its shared prefix
+instead of restoring it from the host spill copy. Blocks pinned by OTHER
+live rows are never spill victims: ``swap_out`` only drops the victim's
+own pins, and a block frees (or parks) strictly on refcount zero — the
+same monotone-refcount discipline eviction relies on. The index also
+**persists across** ``Scheduler.reset()``: parked chains (and their
+device bytes, which the free list never saw) survive into the next run's
+matches.
 """
 from __future__ import annotations
 

@@ -46,6 +46,25 @@ multiplexes a request queue through one jit'd serving step per cycle.
   device-side block copy (copy-on-write; shared blocks are never
   written). Retired requests park their indexed blocks — resident but
   evictable (LRU leaf order) the moment reservations need the space.
+* **Preemption + host swap** (``swap=True``, paged only) — the pool can
+  be *oversubscribed*: when the queue head cannot reserve (blocks or
+  slots), the planner's victim policy may swap a resident row OUT — its
+  committed block contents are gathered device-side
+  (``kvcache.spill_pool_blocks``, one fixed-width traced bucket) into a
+  host ``SpillStore`` (``serving.swapstore``), its physical blocks and
+  reservation return to the pool (``BlockAllocator.swap_out``; shared
+  prefix blocks just drop a pin and stay matchable in the radix cache),
+  and the head admits immediately. The victim requeues and resumes as an
+  ordinary admission: a prefix match re-aliases whatever the cache still
+  holds, and a batched ``restore_pool_blocks`` swap-in brings back the
+  private tail bit-exactly. The victim policy reuses the planner's
+  token-cost model: preempt the lowest-priority resident row whose
+  remaining-work cycles beat the head's time-to-first-token (plus the
+  swap round-trip margin); among equal priorities only rows with MORE
+  remaining work than the head's total are eligible, so preemption is
+  shortest-remaining-first and can never thrash between two long rows.
+  Preempt-then-resume is lossless: restored bytes are bit-copies, so
+  per-request outputs are identical to a never-preempted run.
 * **Retirement** — per-row early exit on ``max_new``, the global
   ``eos_id``, or any of the request's own ``stop_tokens``; the slot (and
   its blocks, when paged) is freed immediately for the next request.
@@ -79,18 +98,32 @@ from repro.serving.engine import (EngineConfig, autoregressive_step,
                                   chunk_prefill_step, spec_decode_step,
                                   unified_step, validate_serving_knobs)
 from repro.serving.prefixcache import PrefixCache, PrefixMatch
+from repro.serving.swapstore import SpillStore
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+# preempted: swapped out to the host SpillStore, waiting to resume
+SWAPPED = "swapped"
+
+# cycles a preemption is budgeted to cost the victim (spill + restore
+# dispatch) — part of the bar the queue head's TTFT gain must clear
+SWAP_MARGIN_CYCLES = 2
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
-    """One generation request moving through the scheduler lifecycle."""
+    """One generation request moving through the scheduler lifecycle.
+
+    ``priority`` orders admission (higher admitted first among ready
+    requests; FIFO within a priority — the all-default case is bitwise
+    the pre-priority FIFO) and shields against preemption (lower
+    priority preempted first). A preempted request carries its
+    ``swap_key`` into the host ``SpillStore`` until it resumes."""
     rid: int
     tokens: np.ndarray                  # (L,) int prompt
     max_new: int
     arrival: float = 0.0                # scheduler-clock cycle of arrival
     stop_tokens: tuple = ()             # per-request stop ids (besides eos)
+    priority: int = 0                   # higher = admitted first, kept last
     state: str = QUEUED
     slot: int = -1
     pos: int = 0                        # prompt tokens prefilled so far
@@ -101,6 +134,8 @@ class Request:
     token_walls: list = dataclasses.field(default_factory=list)
     admitted_at: float = -1.0
     finished_at: float = -1.0
+    swap_key: object = None             # SpillStore key while SWAPPED
+    preemptions: int = 0                # times this request was swapped out
 
     @property
     def done(self) -> bool:
@@ -205,7 +240,9 @@ class Scheduler:
                  chunk_size: int = 32, fused: bool = True,
                  max_prefill_tokens_per_step: int | None = None,
                  prefix_cache: bool = False,
-                 prefix_cache_blocks: int | None = None):
+                 prefix_cache_blocks: int | None = None,
+                 swap: bool = False,
+                 swap_store_blocks: int | None = None):
         if cfg.frontend:
             raise NotImplementedError(
                 "scheduler admission is token-prompt only for now")
@@ -228,7 +265,8 @@ class Scheduler:
             speculative=speculative, paged=paged, block_size=block_size,
             num_blocks=num_blocks, prefix_cache=prefix_cache,
             prefix_cache_blocks=prefix_cache_blocks,
-            max_prefill_tokens_per_step=max_prefill_tokens_per_step)
+            max_prefill_tokens_per_step=max_prefill_tokens_per_step,
+            swap=swap, swap_store_blocks=swap_store_blocks)
         if paged:
             self.max_blocks = blocks_needed(s_max, block_size)
             # default pool: capacity-equivalent to the slot layout (+trash)
@@ -237,6 +275,8 @@ class Scheduler:
         self.max_prefill_tokens_per_step = max_prefill_tokens_per_step
         self.prefix_cache_enabled = prefix_cache
         self.prefix_cache_blocks = prefix_cache_blocks
+        self.swap = swap
+        self.swap_store_blocks = swap_store_blocks
         self.rt = Runtime(cfg=cfg, cass=cass,
                           view="target" if cass else "plain", **rt_extra)
         packed = cass is not None
@@ -267,6 +307,21 @@ class Scheduler:
         # copy-on-write block copies; src/dst are traced (slots,) vectors
         # padded with trash->trash no-ops, so the step compiles once
         self._cow = jax.jit(counted_cow, donate_argnums=(0,))
+
+        def counted_spill(cache, blocks):
+            self.trace_counts["spill"] = (
+                self.trace_counts.get("spill", 0) + 1)
+            return KC.spill_pool_blocks(cache, blocks)
+
+        def counted_restore(cache, blocks, data):
+            self.trace_counts["restore"] = (
+                self.trace_counts.get("restore", 0) + 1)
+            return KC.restore_pool_blocks(cache, blocks, data)
+        # preemption's device<->host transfer halves: ``blocks`` is a
+        # traced (max_blocks,) vector padded with trash entries, so every
+        # spill/restore of any real size shares ONE compile bucket each
+        self._spill = jax.jit(counted_spill)
+        self._restore = jax.jit(counted_restore, donate_argnums=(0,))
         self._reset_state()
 
     def _jit_step(self, name: str, fn):
@@ -277,6 +332,9 @@ class Scheduler:
         return jax.jit(counted, donate_argnums=(1,))
 
     def _reset_state(self) -> None:
+        prev_slots: list = getattr(self, "slots", [])
+        prev_pool: BlockAllocator | None = getattr(self, "pool", None)
+        prev_prefix: PrefixCache | None = getattr(self, "prefix", None)
         self.slots: list[Request | None] = [None] * self.num_slots
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
@@ -291,12 +349,41 @@ class Scheduler:
                       "finished": 0, "peak_resident_tokens": 0,
                       "peak_reserved_tokens": 0, "prefix_queries": 0,
                       "prefix_hits": 0, "prefix_matched_tokens": 0,
-                      "prefix_blocks_aliased": 0, "cow_copies": 0}
+                      "prefix_blocks_aliased": 0, "cow_copies": 0,
+                      "preemptions": 0, "swap_resumes": 0,
+                      "swap_out_blocks": 0, "swap_in_blocks": 0,
+                      "swap_matched_blocks": 0, "peak_swapped_tokens": 0}
+        # measured per-bucket wall times (cost-model refresh seed):
+        # step name -> [calls, total seconds]; summary() reports means
+        self.step_walls: dict[str, list] = {}
         self._next_rid = 0
+        self._next_swap_key = 0
         self.prefix: PrefixCache | None = None
         self._pending_cow: list[tuple[int, int]] = []
         if self.paged:
-            self.pool = BlockAllocator(self.num_blocks)
+            if prev_pool is not None and prev_prefix is not None:
+                # persist the radix index across reset (ROADMAP
+                # follow-up): retire every live owner so only parked
+                # (cacheable) chains stay resident — their device bytes
+                # are intact (parked blocks are never on the free list),
+                # so the next run's admissions match them warm
+                for slot, r in enumerate(prev_slots):
+                    if r is not None:
+                        prev_pool.release(slot)
+                for key in prev_pool.swapped_keys():
+                    prev_pool.drop_swapped(key)
+                # per-run peak: the persisted pool's high-water restarts
+                # at its current occupancy (parked chains), matching the
+                # freshly-zeroed peak_* stats
+                prev_pool.high_water = (prev_pool.allocated_total
+                                        + prev_pool.parked_total)
+                self.pool = prev_pool
+                self.prefix = prev_prefix
+            else:
+                self.pool = BlockAllocator(self.num_blocks)
+                if self.prefix_cache_enabled:
+                    self.prefix = PrefixCache(self.pool, self.block_size,
+                                              self.prefix_cache_blocks)
             self.table = np.full((self.num_slots, self.max_blocks),
                                  TRASH_BLOCK, np.int32)
             # per-slot logical->physical block lists (shared prefix blocks
@@ -306,26 +393,33 @@ class Scheduler:
             # per-slot (trie node, block index) insert watermark so
             # incremental prefix indexing never re-walks committed blocks
             self.row_index: list[tuple] = [(None, 0)] * self.num_slots
-            if self.prefix_cache_enabled:
-                self.prefix = PrefixCache(self.pool, self.block_size,
-                                          self.prefix_cache_blocks)
+        # host spill store for preempted rows (fresh per run — swapped
+        # requests of the previous run were dropped with the queue)
+        self.spill = SpillStore(self.swap_store_blocks) if self.swap \
+            else None
 
     def reset(self) -> None:
         """Clear queue/slots/stats for a fresh run reusing the compiled
         steps — admission re-prefills over a slot's region (or re-points
         its block table), so stale cache contents from the previous run
-        are harmless. The prefix index is rebuilt empty (the pool's
-        previous contents are never matched)."""
+        are harmless. The prefix index PERSISTS across reset: parked
+        chains stay resident and matchable (a warm header from the last
+        run still skips its prefill), while live rows are released so
+        their private blocks return to the pool."""
         self._reset_state()
 
     # -- queue -------------------------------------------------------------
 
     def submit(self, tokens, max_new: int, arrival: float = 0.0,
                rid: int | None = None,
-               stop_tokens=None) -> Request:
+               stop_tokens=None, priority: int = 0) -> Request:
         """Queue one request. ``stop_tokens`` is an optional per-request
         list of token ids that end generation early (delivered inclusive,
-        like EOS) — on top of the scheduler-global ``eos_id``."""
+        like EOS) — on top of the scheduler-global ``eos_id``.
+        ``priority`` (default 0) orders admission among ready requests
+        (higher first; FIFO within a priority, so all-default submission
+        is bitwise the plain FIFO) and the preemption victim policy
+        (lower-priority rows are swapped out first)."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         need = len(tokens) + max_new + self.ecfg.gamma + 1
         if need > self.capacity:
@@ -339,7 +433,8 @@ class Scheduler:
                 f"blocks, pool has {self.pool.capacity}")
         req = Request(rid=self._next_rid if rid is None else rid,
                       tokens=tokens, max_new=max_new, arrival=arrival,
-                      stop_tokens=tuple(stop_tokens or ()))
+                      stop_tokens=tuple(stop_tokens or ()),
+                      priority=priority)
         self._next_rid = req.rid + 1
         self.queue.append(req)
         return req
@@ -372,8 +467,79 @@ class Scheduler:
         pins = sum(1 for n in pinned if self.pool.is_parked(n.block))
         return need - len(m.nodes), m, pins
 
+    def _resume_plan(self, req: Request) -> tuple[int, list, int]:
+        """(blocks to reserve, matched trie nodes to re-alias, parked
+        blocks the resume would pin) for a SWAPPED request. Resume is an
+        ordinary admission-shaped prefix match — whatever chain the radix
+        cache still holds is aliased instead of restored — capped at the
+        row's own committed full blocks so a since-deepened cache can
+        never fast-forward the row past its saved position. The spilled
+        chain covers everything the match does not."""
+        chain = self.spill.get(req.swap_key)
+        need = self._request_blocks(req)
+        if self.prefix is None:
+            return need, [], 0
+        m = self.prefix.match(req.tokens)
+        usable = min(len(m.nodes), req.pos // self.block_size,
+                     chain.n_blocks)
+        nodes = list(m.nodes[:usable])
+        pins = sum(1 for n in nodes if self.pool.is_parked(n.block))
+        return need - len(nodes), nodes, pins
+
+    def _admit_resumed(self, req: Request, slot: int,
+                       plan: tuple[int, list, int]) -> None:
+        """Swap a preempted request back in: re-reserve, re-alias the
+        still-cached prefix, restore the spilled tail bit-exactly, and
+        re-seed the slot's host state (length, position, last token).
+        Output, latency stamps and ``admitted_at`` survive untouched —
+        the request continues, it does not restart."""
+        chain = self.spill.get(req.swap_key)
+        n_reserve, nodes, _ = plan
+        req.state, req.slot = RUNNING, slot
+        self.slots[slot] = req
+        self.pool.swap_in(req.swap_key, slot, n_reserve)
+        self.table[slot, :] = TRASH_BLOCK
+        blocks: list[int] = []
+        for node in nodes:
+            self.pool.share(slot, node.block)
+            blocks.append(node.block)
+        matched = len(nodes)
+        restore_n = chain.n_blocks - matched
+        for _ in range(restore_n):
+            blocks.append(self.pool.alloc(slot))
+        if restore_n:
+            vec = np.full(self.max_blocks, TRASH_BLOCK, np.int32)
+            vec[:restore_n] = blocks[matched:]
+            data = jax.tree.map(
+                jnp.asarray,
+                chain.slice_blocks(matched, chain.n_blocks,
+                                   self.max_blocks))
+            t0 = time.time()
+            self.cache = self._restore(self.cache, jnp.asarray(vec), data)
+            # the restore is async-dispatched; block on one output of
+            # the executable so the stamped wall time covers the real
+            # host->device transfer + scatter (the cost-model seed the
+            # other buckets measure), not just dispatch
+            jax.block_until_ready(self.cache["length"])
+            self._stamp_wall("restore", t0)
+        self.row_blocks[slot] = blocks
+        self.row_index[slot] = (nodes[-1] if nodes else None, matched)
+        if blocks:
+            self.table[slot, :len(blocks)] = blocks
+        self.lengths[slot] = chain.length
+        self.cur[slot, 0] = chain.cur
+        req.pos = chain.pos
+        self.spill.pop(req.swap_key)
+        req.swap_key = None
+        self.stats["swap_resumes"] += 1
+        self.stats["swap_in_blocks"] += restore_n
+        self.stats["swap_matched_blocks"] += matched
+
     def _admit(self, req: Request, slot: int,
                plan: tuple[int, PrefixMatch | None, int] | None) -> None:
+        if req.state == SWAPPED:
+            self._admit_resumed(req, slot, plan)
+            return
         req.state, req.slot, req.admitted_at = RUNNING, slot, self.clock
         req.pos, req.prefill_done, req.output = 0, False, []
         req.prefix_matched = 0
@@ -423,28 +589,165 @@ class Scheduler:
                 self.table[slot, :len(blocks)] = blocks
         self.stats["admitted"] += 1
 
-    def _admit_ready(self) -> None:
-        """FIFO among *ready* requests — a future arrival queued ahead
-        must not head-of-line-block one that is already due. When paged,
-        the head-of-line request also gates on pool reservation (its
-        unshared blocks plus any parked cache blocks it would pin); it
-        waits (rather than being skipped) so small requests cannot
-        starve it."""
-        for slot in range(self.num_slots):
-            if self.slots[slot] is not None:
+    def _next_ready_index(self) -> int | None:
+        """Queue index of the next request to admit: the highest
+        ``priority`` among *ready* requests (arrival <= clock), FIFO
+        within a priority — with all-default priorities this is exactly
+        the first ready request, the pre-priority FIFO behavior. A
+        future arrival queued ahead never head-of-line-blocks one that
+        is already due."""
+        best, best_p = None, None
+        for i, r in enumerate(self.queue):
+            if r.arrival > self.clock:
                 continue
-            idx = next((i for i, r in enumerate(self.queue)
-                        if r.arrival <= self.clock), None)
+            if best is None or r.priority > best_p:
+                best, best_p = i, r.priority
+        return best
+
+    # -- preemption (victim policy + host swap) ------------------------------
+
+    def _remaining_cycles(self, req: Request) -> int:
+        """Token-cost-model estimate of a row's remaining work, in the
+        same worst-case cycle units ``_plan_wide_cycle`` trades in:
+        γ+1-wide prefill passes for the unprefilled prompt plus one
+        cycle per still-owed token (the autoregressive decode bound)."""
+        width = self.ecfg.gamma + 1 if self.speculative else 1
+        prefill = 0 if req.prefill_done else \
+            -(-max(len(req.tokens) - req.pos, 0) // width)
+        return prefill + max(req.max_new - len(req.output), 0)
+
+    def _head_admit_cycles(self, head: Request, matched: int) -> int:
+        """Cycles from admission to the head's first token (its TTFT if
+        admitted now): prefill of the unmatched prompt at the riding
+        width, plus the cycle that commits the first token, plus the
+        swap round-trip margin a preemption spends to make room."""
+        width = self.ecfg.gamma + 1 if self.speculative else 1
+        unprefilled = max(len(head.tokens) - max(head.pos, matched), 0)
+        return -(-unprefilled // width) + 1 + SWAP_MARGIN_CYCLES
+
+    def _preempt(self, victim: Request) -> None:
+        """Swap ``victim`` out: flush any copy-on-write it is owed, spill
+        its committed blocks' contents to the host store (device gather
+        BEFORE the allocator frees them), release blocks + reservation
+        (``swap_out`` — shared prefix blocks just drop a pin and stay
+        matchable), and requeue it at the front with its original
+        arrival. Everything a bit-exact resume needs (length, prompt
+        position, last committed token, KV bytes) is in the chain."""
+        if self._pending_cow:
+            self._flush_cow()
+        slot = victim.slot
+        n_res = blocks_needed(int(self.lengths[slot]), self.block_size)
+        vec = np.full(self.max_blocks, TRASH_BLOCK, np.int32)
+        vec[:n_res] = self.row_blocks[slot][:n_res]
+        key = self._next_swap_key
+        self._next_swap_key += 1
+        t0 = time.time()
+        data = self._spill(self.cache, jnp.asarray(vec))
+        self.spill.put(key, data, n_res, length=int(self.lengths[slot]),
+                       pos=victim.pos, cur=int(self.cur[slot, 0]))
+        self._stamp_wall("spill", t0)
+        self.pool.swap_out(slot, key, n_res)
+        self.table[slot, :] = TRASH_BLOCK
+        self.row_blocks[slot] = []
+        self.row_index[slot] = (None, 0)
+        self.slots[slot] = None
+        self.lengths[slot] = 0
+        victim.state, victim.slot, victim.swap_key = SWAPPED, -1, key
+        victim.preemptions += 1
+        self.queue.appendleft(victim)
+        self.stats["preemptions"] += 1
+        self.stats["swap_out_blocks"] += n_res
+
+    def _plan_for(self, req: Request):
+        """The request's admission plan — resume-shaped for a SWAPPED
+        request, fresh-shaped otherwise. Both are (blocks to reserve,
+        cached match, parked blocks the admission would pin)."""
+        return (self._resume_plan(req) if req.state == SWAPPED
+                else self._admission_plan(req))
+
+    def _try_preempt_for(self, head: Request, matched: int):
+        """Victim policy: free capacity for the queue head by swapping
+        out resident rows. Reuses the planner's token-cost model —
+        preempt only rows whose remaining-work cycles beat the head's
+        admission-to-first-token cost (the head gains more TTFT than the
+        victim loses progress). Victim order: lowest priority first,
+        most remaining work within a priority. Anti-thrash: an
+        equal-priority victim additionally needs MORE remaining work
+        than the head's total (shortest-remaining-first), so two long
+        rows can never preempt each other in a loop. Returns the head's
+        refreshed plan once it fits the pool, else None (no eligible
+        victim, or everything eligible still wasn't enough — any rows
+        already preempted stay out and resume on their own merit)."""
+        head_cost = self._head_admit_cycles(head, matched)
+        head_rem = self._remaining_cycles(head)
+        cands = []
+        for r in self.slots:
+            if r is None:
+                continue
+            rem = self._remaining_cycles(r)
+            if rem <= head_cost:
+                continue                    # not worth the head's wait
+            if r.priority > head.priority:
+                continue                    # never preempt upward
+            if r.priority == head.priority and rem <= head_rem:
+                continue                    # anti-thrash: SRPT order
+            cands.append((r.priority, -rem, r.slot, r))
+        for _, _, _, victim in sorted(cands, key=lambda c: c[:3]):
+            n_res = blocks_needed(int(self.lengths[victim.slot]),
+                                  self.block_size)
+            if not self.spill.can_hold(n_res):
+                continue                    # host store full: skip victim
+            self._preempt(victim)
+            plan = self._plan_for(head)
+            if self.pool.can_reserve(plan[0], plan[2]):
+                return plan
+        return None
+
+    def _admit_ready(self) -> None:
+        """Admit ready requests in priority-then-FIFO order. When paged,
+        the head-of-line request gates on pool reservation (its unshared
+        blocks plus any parked cache blocks it would pin); it waits
+        (rather than being skipped) so small requests cannot starve it —
+        unless preemption (``swap=True``) can free the capacity by
+        swapping out a resident row the victim policy deems cheaper."""
+        while True:
+            idx = self._next_ready_index()
             if idx is None:
-                break
+                return
             req = self.queue[idx]
-            plan = None
-            if self.paged:
-                plan = self._admission_plan(req)
-                if not self.pool.can_reserve(plan[0], plan[2]):
-                    break
+            slot = next((s for s in range(self.num_slots)
+                         if self.slots[s] is None), None)
+            plan = self._plan_for(req) if self.paged else None
+            fits = plan is None or self.pool.can_reserve(plan[0], plan[2])
+            if slot is None or not fits:
+                if not self.swap:
+                    return
+                plan = self._try_preempt_for(
+                    req, self._matched_plan_tokens(plan))
+                if plan is None:
+                    return
+                # preemption requeued victims at the front — re-resolve
+                # the head's queue position and the (now free) slot
+                idx = next(i for i, r in enumerate(self.queue) if r is req)
+                slot = next((s for s in range(self.num_slots)
+                             if self.slots[s] is None), None)
+                if slot is None:
+                    return
             del self.queue[idx]
             self._admit(req, slot, plan)
+
+    @staticmethod
+    def _matched_plan_tokens(plan) -> int:
+        """Cached-prefix tokens the head's plan would skip (TTFT
+        estimate input for the victim policy; 0 without the cache)."""
+        if plan is None:
+            return 0
+        m = plan[1]
+        if m is None:
+            return 0
+        if isinstance(m, PrefixMatch):
+            return m.full_tokens
+        return sum(len(n.key) for n in m)       # resume plan: node list
 
     # -- retirement --------------------------------------------------------
 
@@ -476,6 +779,17 @@ class Scheduler:
             self.table[req.slot, :] = TRASH_BLOCK
         self.finished.append(req)
         self.stats["finished"] += 1
+
+    def _stamp_wall(self, name: str, t0: float) -> None:
+        """Fold one device-step invocation's wall time into the per-bucket
+        stats (``trace_counts``-style, keyed by the same step names).
+        These measured per-bucket times seed the cost-model refresh: the
+        planner's token-cost comparisons (``_plan_wide_cycle``, the
+        preemption policy) trade in cycle units, and ``summary()`` makes
+        the actual per-bucket wall costs observable next to them."""
+        w = self.step_walls.setdefault(name, [0, 0.0])
+        w[0] += 1
+        w[1] += time.time() - t0
 
     def _record_tokens(self, req: Request, k: int) -> None:
         """Stamp ``k`` just-committed tokens with this cycle's end time."""
@@ -576,6 +890,13 @@ class Scheduler:
             reserved = sum(r is not None for r in self.slots) * self.s_max
         self.stats["peak_reserved_tokens"] = max(
             self.stats["peak_reserved_tokens"], reserved)
+        if self.paged and self.swap:
+            # honest accounting for oversubscription: swapped rows hold
+            # ZERO device blocks — their tokens live host-side and are
+            # reported separately, never netted against pool residency
+            self.stats["peak_swapped_tokens"] = max(
+                self.stats["peak_swapped_tokens"],
+                self.pool.swapped_blocks_total * self.block_size)
 
     # -- prefill -----------------------------------------------------------
 
@@ -591,10 +912,12 @@ class Scheduler:
             if self.paged:
                 self._grow_blocks(r, r.pos + v)
         self._push_host_state()
+        t0 = time.time()
         last, self.cache = self._chunk(self.params, self.cache,
                                        jnp.asarray(tokens),
                                        jnp.asarray(valid))
         last = np.asarray(last)
+        self._stamp_wall("chunk", t0)
         for r in prefilling:
             r.pos += int(valid[r.slot])
             self.lengths[r.slot] += int(valid[r.slot])
@@ -699,10 +1022,13 @@ class Scheduler:
                                   + self.ecfg.gamma + 1)
         self._push_host_state()
         self.key, sub = jax.random.split(self.key)
+        t0 = time.time()
         res, last, self.cache = self._unified(
             self.params, self.cache, jnp.asarray(self.cur),
             jnp.asarray(plan.chunk_tokens), jnp.asarray(plan.prefill_valid),
             jnp.asarray(plan.decode_mask), sub)
+        jax.block_until_ready(res.tokens)
+        self._stamp_wall("unified", t0)
         # harvest prefill rows
         if plan.prefilling:
             last = np.asarray(last)
@@ -766,6 +1092,7 @@ class Scheduler:
         self.key, sub = jax.random.split(self.key)
         cur = jnp.asarray(self.cur)
         act = jnp.asarray(active)
+        t0 = time.time()
         if self.speculative:
             res, self.cache = self._spec(self.params, self.cache, cur,
                                          sub, act)
@@ -775,6 +1102,7 @@ class Scheduler:
             nxt = np.asarray(res.next_token)
             self.stats["accepted"] += int(n[active].sum())
             self.stats["drafted"] += self.ecfg.gamma * int(active.sum())
+            self._stamp_wall("spec", t0)
         else:
             nxt_dev, self.cache = self._auto(self.params, self.cache, cur,
                                              sub, act)
@@ -782,6 +1110,7 @@ class Scheduler:
             tokens = nxt[:, None]
             valid = np.ones_like(tokens, bool)
             n = np.zeros(self.num_slots, np.int64)
+            self._stamp_wall("auto", t0)
         for slot in np.flatnonzero(active):
             self._harvest_decode_row(self.slots[slot], tokens, valid, n,
                                      nxt)
@@ -849,4 +1178,16 @@ class Scheduler:
                                     / max(s["prefix_queries"], 1))
             s["prefix_cached_blocks"] = len(self.prefix)
             s["prefix_parked_blocks"] = self.pool.parked_total
+        if self.swap:
+            s["swapped_now"] = self.pool.swapped_total
+            s["spill_peak_blocks"] = self.spill.peak_blocks
+            s["spill_peak_bytes"] = self.spill.peak_bytes
+            s["spill_held_bytes"] = self.spill.nbytes
+        # measured per-bucket wall times (cost-model refresh seed): what
+        # one invocation of each compiled step actually costs, next to
+        # the cycle-unit token-cost model the planner reasons in
+        s["bucket_wall_ms"] = {
+            name: {"calls": calls, "total_ms": total * 1e3,
+                   "mean_ms": total * 1e3 / max(calls, 1)}
+            for name, (calls, total) in sorted(self.step_walls.items())}
         return s

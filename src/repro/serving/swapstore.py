@@ -1,0 +1,148 @@
+"""Host-side spill store for preempted requests' KV block chains.
+
+The paged pool (``serving.blockpool``) admits a request only when its
+worst-case blocks fit — so a full pool makes the queue head wait behind
+the *slowest* resident generation, exactly the head-of-line stall the
+continuous-batching scheduler exists to avoid. Preemption breaks the
+wait: the scheduler's victim policy swaps a resident row OUT — its block
+contents are gathered device-side (``kvcache.spill_pool_blocks``),
+copied here, and its physical blocks returned to the pool — so the
+queue head admits immediately. The victim re-admits later as an ordinary
+prefix match plus a batched restore (``kvcache.restore_pool_blocks``) of
+whatever the radix cache no longer holds.
+
+The store is deliberately dumb: a dict of per-request *chains*, each a
+bit-copy of the row's resident logical blocks (plain bf16 or
+Cassandra-packed leaves alike — spill never decodes), keyed by a
+per-preemption token the scheduler mints. Losslessness rests on the
+chain covering the row's **entire** resident prefix, shared blocks
+included: the shared head normally re-matches in the radix cache at
+swap-in (and those chain entries go unused), but a cached chain is
+evictable the moment its pins drop — under exactly the memory pressure
+that caused the preemption — so the spill copy is the backstop that
+makes preempt-then-resume bitwise unconditional rather than dependent
+on what survived in the cache.
+
+``max_blocks`` caps host-side residency (the ``--swap-store-blocks``
+knob): the victim policy checks ``can_hold`` before preempting, so a
+full store means "stop preempting", never "drop a chain".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+
+
+def _tree_device_get(tree):
+    """Device pytree -> numpy leaves (one transfer per leaf batch)."""
+    return jax.tree.map(np.asarray, jax.device_get(tree))
+
+
+def _tree_nbytes(tree) -> int:
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
+
+
+@dataclasses.dataclass
+class SpilledChain:
+    """One preempted row's host-resident state.
+
+    ``data`` mirrors ``cache["dec"]`` with attention leaves
+    (R, n_blocks, BS, …): entry ``i`` along the block axis is logical
+    block ``i`` of the row. ``length``/``pos``/``cur`` are the host
+    scalars a resume needs to re-seed the slot bit-exactly."""
+    data: list
+    n_blocks: int
+    length: int
+    pos: int
+    cur: int
+    nbytes: int
+
+    def slice_blocks(self, start: int, stop: int, pad_to: int):
+        """Leaves (R, pad_to, BS, …) holding logical blocks
+        [start, stop), zero-padded past the real ones — the exact
+        operand shape ``restore_pool_blocks`` compiled for."""
+        if not (0 <= start <= stop <= self.n_blocks):
+            raise ValueError(
+                f"restore range [{start}, {stop}) outside the spilled "
+                f"chain's {self.n_blocks} blocks")
+        if stop - start > pad_to:
+            raise ValueError(
+                f"restore of {stop - start} blocks exceeds the "
+                f"{pad_to}-block compile bucket")
+
+        def pad(leaf):
+            shape = (leaf.shape[0], pad_to) + leaf.shape[2:]
+            out = np.zeros(shape, leaf.dtype)
+            out[:, :stop - start] = leaf[:, start:stop]
+            return out
+        return jax.tree.map(pad, self.data)
+
+
+class SpillStore:
+    """Keyed store of spilled chains with byte/block accounting."""
+
+    def __init__(self, max_blocks: int | None = None):
+        if max_blocks is not None and max_blocks < 1:
+            raise ValueError("swap store cap must be >= 1 block")
+        self.max_blocks = max_blocks
+        self._chains: dict[object, SpilledChain] = {}
+        self.peak_blocks = 0
+        self.peak_bytes = 0
+        self.total_spilled_blocks = 0
+        self.total_restored_blocks = 0
+
+    def __len__(self) -> int:
+        return len(self._chains)
+
+    def __contains__(self, key) -> bool:
+        return key in self._chains
+
+    @property
+    def blocks(self) -> int:
+        return sum(c.n_blocks for c in self._chains.values())
+
+    @property
+    def nbytes(self) -> int:
+        return sum(c.nbytes for c in self._chains.values())
+
+    def can_hold(self, n_blocks: int) -> bool:
+        """Victim-policy gate: would a chain of ``n_blocks`` fit?"""
+        if self.max_blocks is None:
+            return True
+        return self.blocks + n_blocks <= self.max_blocks
+
+    def put(self, key, data, n_blocks: int, *, length: int, pos: int,
+            cur: int) -> SpilledChain:
+        """Store one spilled chain. ``data`` is the (device or host)
+        pytree from ``spill_pool_blocks`` — its block axis is trimmed to
+        the ``n_blocks`` real entries before the host copy is kept."""
+        if key in self._chains:
+            raise ValueError(f"spill key {key!r} already stored")
+        if not self.can_hold(n_blocks):
+            raise ValueError(
+                f"spilling {n_blocks} blocks would exceed the swap "
+                f"store cap ({self.blocks}/{self.max_blocks} held)")
+        host = _tree_device_get(
+            jax.tree.map(lambda leaf: leaf[:, :n_blocks], data))
+        chain = SpilledChain(data=host, n_blocks=n_blocks, length=length,
+                             pos=pos, cur=cur, nbytes=_tree_nbytes(host))
+        self._chains[key] = chain
+        self.total_spilled_blocks += n_blocks
+        self.peak_blocks = max(self.peak_blocks, self.blocks)
+        self.peak_bytes = max(self.peak_bytes, self.nbytes)
+        return chain
+
+    def get(self, key) -> SpilledChain:
+        return self._chains[key]
+
+    def pop(self, key) -> SpilledChain:
+        """Remove a chain after a successful restore (or abandonment)."""
+        chain = self._chains.pop(key)
+        self.total_restored_blocks += chain.n_blocks
+        return chain
+
+    def clear(self) -> None:
+        self._chains.clear()

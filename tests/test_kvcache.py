@@ -1,6 +1,7 @@
 """Paged KV cache: block-allocator invariants (including prefix-sharing
-refcounts / copy-on-write / eviction), bit-exact packed-store round-trips
-through a block table, and the radix prefix index.
+refcounts / copy-on-write / eviction, and the preemption SWAPPED state),
+bit-exact packed-store round-trips through a block table, device
+spill→restore swap round-trips, and the radix prefix index.
 
 Each property has a shared checker driven two ways: hypothesis explores
 arbitrary traffic when it is installed (CI), and a deterministic seeded
@@ -17,6 +18,7 @@ from repro.serving import kvcache as KC
 from repro.serving.blockpool import (BlockAllocator, TRASH_BLOCK,
                                      blocks_needed)
 from repro.serving.prefixcache import PrefixCache
+from repro.serving.swapstore import SpillStore
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -238,6 +240,148 @@ def test_share_refcount_lifecycle():
     pool.check_invariants()
 
 
+def _random_swap_ops(rng, n):
+    kinds = ["admit", "grow", "share", "cache", "retire", "swap_out",
+             "swap_in"]
+    return [(kinds[rng.integers(len(kinds))], int(rng.integers(8)),
+             int(rng.integers(8))) for _ in range(n)]
+
+
+def _check_swap_trace(num_blocks, ops):
+    """Arbitrary admit/grow/share/cache/retire/swap traffic over the
+    SWAPPED state: swap_out surrenders blocks + reservation exactly like
+    release (shared survivors stay live, cacheable blocks park), a
+    swapped key holds zero gate capacity while its logical chain stays
+    recorded, swap_in is an ordinary gated reservation, and double
+    swap_out / unknown swap_in always raise."""
+    pool = BlockAllocator(num_blocks)
+    pool.evictor = lambda: pool.drop_cached(next(iter(pool._parked)))
+    live: list[int] = []
+    reserved: dict[int, int] = {}
+    swapped: dict[int, int] = {}        # key -> logical blocks
+    next_owner = 0
+    next_key = 0
+    for kind, v, w in ops:
+        if kind == "admit":
+            need = v % 4 + 1
+            if pool.can_reserve(need):
+                pool.reserve(next_owner, need)
+                reserved[next_owner] = need
+                live.append(next_owner)
+                next_owner += 1
+        elif kind == "grow" and live:
+            owner = live[v % len(live)]
+            if len(pool.blocks_of(owner)) < reserved[owner]:
+                pool.alloc(owner)
+        elif kind == "share" and live:
+            owner = live[v % len(live)]
+            cands = sorted(pool._refs)
+            if cands:
+                pool.share(owner, cands[w % len(cands)])
+        elif kind == "cache" and pool._refs:
+            cands = sorted(pool._refs)
+            pool.mark_cacheable(cands[v % len(cands)])
+        elif kind == "retire" and live:
+            owner = live.pop(v % len(live))
+            pool.release(owner)
+            del reserved[owner]
+        elif kind == "swap_out" and live:
+            owner = live.pop(v % len(live))
+            charged = list(pool.blocks_of(owner))
+            held = charged + list(pool._shared[owner])
+            gate_before = pool.reserved_total + pool.uncharged_total
+            dropped = pool.swap_out(owner, next_key, len(held))
+            # the swapped key holds ZERO gate capacity: the whole
+            # reservation left the gate; the only additions are the
+            # owner's charged blocks that sharers kept live (each now
+            # uncharged, exactly as a plain release would leave them),
+            # minus uncharged blocks whose last pin the victim held
+            survivors = sum(1 for b in charged if pool.refcount(b) >= 1)
+            dead_uncharged = sum(1 for b in dropped if b not in charged)
+            assert (pool.reserved_total + pool.uncharged_total
+                    == gate_before - reserved[owner] + survivors
+                    - dead_uncharged)
+            for blk in dropped:
+                assert pool.refcount(blk) == 0
+            assert pool.is_swapped(next_key)
+            with pytest.raises(ValueError):
+                pool.swap_out(owner, next_key, 0)   # double swap / gone
+            swapped[next_key] = len(held)
+            del reserved[owner]
+            next_key += 1
+        elif kind == "swap_in" and swapped:
+            keys = sorted(swapped)
+            key = keys[v % len(keys)]
+            need = w % 4 + 1
+            if pool.can_reserve(need):
+                pool.swap_in(key, next_owner, need)
+                assert not pool.is_swapped(key)
+                del swapped[key]
+                reserved[next_owner] = need
+                live.append(next_owner)
+                next_owner += 1
+            else:
+                with pytest.raises(ValueError):
+                    pool.reserve(next_owner, need)
+        assert pool.swapped_total == len(swapped)
+        assert pool.swapped_blocks_total == sum(swapped.values())
+        pool.check_invariants()
+    with pytest.raises(ValueError):
+        pool.swap_in(object(), "nobody", 1)         # unknown key
+    for key in list(swapped):
+        pool.drop_swapped(key)
+    for owner in list(live):
+        pool.release(owner)
+    pool.check_invariants()
+    assert pool.swapped_total == 0
+    assert pool.allocated_total == 0 and pool.reserved_total == 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_swap_trace_seeded(seed):
+    rng = np.random.default_rng(seed + 200)
+    _check_swap_trace(int(rng.integers(3, 25)), _random_swap_ops(rng, 80))
+
+
+if HAVE_HYPOTHESIS:
+    SWAP_OPS = st.lists(
+        st.tuples(st.sampled_from(["admit", "grow", "share", "cache",
+                                   "retire", "swap_out", "swap_in"]),
+                  st.integers(0, 7), st.integers(0, 7)),
+        min_size=1, max_size=80)
+
+    @needs_hypothesis
+    @given(st.integers(3, 24), SWAP_OPS)
+    @settings(**SETTINGS)
+    def test_swap_trace_property(num_blocks, ops):
+        _check_swap_trace(num_blocks, ops)
+
+
+def test_swap_state_machine():
+    """SWAPPED lifecycle basics: swap_out releases like release, the key
+    retains the logical chain length, swap_in re-reserves through the
+    gate, and misuse raises."""
+    pool = BlockAllocator(6)
+    pool.reserve("a", 3)
+    blocks = [pool.alloc("a") for _ in range(3)]
+    assert pool.swap_out("a", "k", 3) == sorted(blocks, reverse=True)
+    assert pool.is_swapped("k") and pool.swapped_blocks_total == 3
+    assert pool.reserved_total == 0 and pool.allocated_total == 0
+    pool.check_invariants()
+    # the freed capacity is genuinely reusable while "a" is out
+    pool.reserve("b", 5)
+    with pytest.raises(ValueError):
+        pool.swap_in("k", "a", 1)       # gate: no room to come back
+    pool.release("b")
+    pool.swap_in("k", "a", 3)
+    assert not pool.is_swapped("k") and pool.reserved_total == 3
+    with pytest.raises(ValueError):
+        pool.swap_in("k", "a2", 1)      # key consumed
+    with pytest.raises(ValueError):
+        pool.drop_swapped("k")
+    pool.check_invariants()
+
+
 def test_allocator_basics():
     pool = BlockAllocator(5)
     assert pool.capacity == 4
@@ -393,6 +537,139 @@ def test_copy_pool_blocks_cow_never_mutates_source(packed):
                                   np.asarray(want[0, :BS - 2], np.float32))
     np.testing.assert_array_equal(np.asarray(got[0, BS - 2:], np.float32),
                                   np.asarray(yd[0], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Device spill -> host -> restore (preemption swap round-trip)
+# ---------------------------------------------------------------------------
+
+
+def _as_cache(pool_store):
+    """Wrap a store as the minimal (R, NB, BS, …) cache tree the
+    spill/restore steps operate on."""
+    return {"dec": [{"e0": jax.tree.map(lambda c: c[None], pool_store)}]}
+
+
+def _check_swap_roundtrip(seed, packed, offset):
+    """``spill``→``restore`` is identity: a row's blocks gathered to host
+    and scattered back into freshly allocated blocks reconstruct its
+    view bit-exactly (plain and packed streams), trash-padded entries
+    are no-ops, and rows that were never swapped are untouched."""
+    key = jax.random.PRNGKey(seed)
+    q = BS * MB
+    x = jax.random.normal(key, (B, q, HKV, D), jnp.float32) \
+        .astype(jnp.bfloat16)
+    pool = _empty_pool() if packed else jnp.zeros((NB, BS, HKV, D),
+                                                  jnp.bfloat16)
+    pool = KC.append_paged_batched(
+        pool, _encode(x) if packed else x, TABLE, jnp.zeros(B, jnp.int32))
+    cache = _as_cache(pool)
+    victim_blocks = np.asarray(TABLE[0])            # spill row 0's chain
+    pad = MB + 2                                    # fixed compile bucket
+    vec = np.full(pad, TRASH_BLOCK, np.int32)
+    vec[:MB] = victim_blocks
+    spilled = KC.spill_pool_blocks(cache, jnp.asarray(vec))
+    store = SpillStore()
+    store.put("r0", spilled[0]["e0"], MB, length=q, pos=4, cur=7)
+    # the victim's blocks are freed and clobbered by another request
+    clobber = jax.random.normal(jax.random.fold_in(key, 1),
+                                (B, q, HKV, D), jnp.float32) \
+        .astype(jnp.bfloat16)
+    pool2 = KC.append_paged_batched(
+        pool, _encode(clobber) if packed else clobber,
+        jnp.tile(TABLE[:1], (B, 1)), jnp.zeros(B, jnp.int32))
+    cache = _as_cache(pool2)
+    # resume into a different set of physical blocks, restoring a
+    # sub-range [offset, MB) as a partial prefix re-alias would
+    new_blocks = np.asarray(TABLE[1])               # row 1's blocks
+    rvec = np.full(pad, TRASH_BLOCK, np.int32)
+    rvec[:MB - offset] = new_blocks[offset:]
+    chain = store.get("r0")
+    data = [{"e0": jax.tree.map(jnp.asarray,
+                                chain.slice_blocks(offset, MB, pad))}]
+    restored = KC.restore_pool_blocks(cache, jnp.asarray(rvec), data)
+    got = KC.gather_store(
+        jax.tree.map(lambda c: c[0], restored["dec"][0]["e0"]),
+        jnp.asarray(new_blocks)[None, :])
+    want = KC.gather_store(pool, TABLE)
+    if packed:
+        got = KC.read_store(CASS, got, D, "target", BOOK)
+        want = KC.read_store(CASS, want, D, "target", BOOK)
+    # restored range is bit-identical to the pre-preemption bytes
+    np.testing.assert_array_equal(
+        np.asarray(got[0, offset * BS:], np.float32),
+        np.asarray(want[0, offset * BS:], np.float32))
+    assert store.pop("r0").n_blocks == MB
+    assert store.blocks == 0 and store.total_restored_blocks == MB
+
+
+@pytest.mark.parametrize("packed", [False, True])
+@pytest.mark.parametrize("offset", [0, 1])
+def test_swap_roundtrip_bit_exact(packed, offset):
+    _check_swap_roundtrip(11 * offset + 3, packed, offset)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @given(st.integers(0, 2 ** 31 - 1), st.booleans(),
+           st.integers(0, MB - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_swap_roundtrip_property(seed, packed, offset):
+        _check_swap_roundtrip(seed, packed, offset)
+
+
+def test_swap_roundtrip_other_rows_untouched():
+    """Restoring one row's chain must not disturb blocks it does not
+    own — the trash-padded scatter only lands on the target blocks (and
+    the trash block, which holds garbage by contract)."""
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (B, BS * MB, HKV, D), jnp.float32) \
+        .astype(jnp.bfloat16)
+    pool = jnp.zeros((NB, BS, HKV, D), jnp.bfloat16)
+    pool = KC.append_paged_batched(pool, x, TABLE, jnp.zeros(B, jnp.int32))
+    cache = _as_cache(pool)
+    vec = np.full(MB, TRASH_BLOCK, np.int32)
+    vec[:MB] = np.asarray(TABLE[0])
+    spilled = KC.spill_pool_blocks(cache, jnp.asarray(vec))
+    store = SpillStore()
+    store.put("r", spilled[0]["e0"], MB, length=BS * MB, pos=0, cur=0)
+    data = [{"e0": jax.tree.map(
+        jnp.asarray, store.get("r").slice_blocks(0, MB, MB))}]
+    restored = KC.restore_pool_blocks(cache, jnp.asarray(vec), data)
+    # row 1's blocks are bit-identical before and after
+    np.testing.assert_array_equal(
+        np.asarray(restored["dec"][0]["e0"][0][np.asarray(TABLE[1])],
+                   np.float32),
+        np.asarray(pool[np.asarray(TABLE[1])], np.float32))
+
+
+def test_spill_store_cap_and_accounting():
+    """SpillStore: byte/block accounting, the ``can_hold`` victim-policy
+    gate (a full store refuses new chains, never drops one), duplicate
+    keys and out-of-range restores raise."""
+    x = jnp.ones((1, 2, BS, HKV, D), jnp.bfloat16)      # (R,K,BS,…) leaf
+    store = SpillStore(max_blocks=3)
+    store.put("a", [{"e0": {"k": x, "v": x}}], 2, length=8, pos=8, cur=1)
+    assert store.blocks == 2 and store.nbytes > 0
+    assert store.can_hold(1) and not store.can_hold(2)
+    with pytest.raises(ValueError):
+        store.put("a", [{"e0": {"k": x, "v": x}}], 1,
+                  length=1, pos=1, cur=0)               # duplicate key
+    with pytest.raises(ValueError):
+        store.put("b", [{"e0": {"k": x, "v": x}}], 2,
+                  length=1, pos=1, cur=0)               # over cap
+    chain = store.get("a")
+    assert chain.length == 8 and chain.cur == 1
+    with pytest.raises(ValueError):
+        chain.slice_blocks(1, 3, 4)                     # past n_blocks
+    with pytest.raises(ValueError):
+        chain.slice_blocks(0, 2, 1)                     # bucket too small
+    out = chain.slice_blocks(1, 2, 3)
+    assert jax.tree.leaves(out)[0].shape[1] == 3        # padded to bucket
+    store.pop("a")
+    assert store.blocks == 0 and store.peak_blocks == 2
+    assert store.total_spilled_blocks == 2
+    assert store.total_restored_blocks == 2
 
 
 # ---------------------------------------------------------------------------

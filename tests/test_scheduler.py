@@ -624,6 +624,226 @@ def test_serving_knob_validation(model):
                   block_size=GAMMA + 1, chunk_size=GAMMA + 1)
 
 
+# -- preemption + host swap --------------------------------------------------
+
+
+def _oversub_trace(cfg, seed=7, prompt_len=8, long_new=16, short_new=4):
+    """One long background generation admitted first, then short
+    interactive requests arriving while it is mid-generation — the
+    preemption regime. With the tight pool below, only one worst-case
+    chain fits at a time, so each short arrival must preempt."""
+    key = jax.random.PRNGKey(seed)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(key, i), (prompt_len,), 0, cfg.vocab_size))
+        for i in range(3)]
+    max_news = [long_new, short_new, short_new]
+    arrivals = [0.0, 2.0, 4.0]
+    return prompts, max_news, arrivals
+
+
+def _run_swap_trace(cfg, params, cass=None, num_blocks=40, swap=False,
+                    priorities=None, gamma=GAMMA, long_new=16):
+    prompts, max_news, arrivals = _oversub_trace(cfg, long_new=long_new)
+    s_max = 8 + long_new + gamma + 1
+    sched = Scheduler(cfg, params, cass=cass, ecfg=EngineConfig(gamma=gamma),
+                      num_slots=2, s_max=s_max, rt_extra={"ssm_chunk": 8},
+                      paged=True, block_size=4, num_blocks=num_blocks,
+                      swap=swap)
+    priorities = priorities or [0] * len(prompts)
+    reqs = [sched.submit(p, max_new=mn, arrival=a, priority=pr)
+            for p, mn, a, pr in zip(prompts, max_news, arrivals,
+                                    priorities)]
+    sched.run()
+    return sched, reqs
+
+
+def test_swap_preempt_resume_lossless(model):
+    """The tentpole's losslessness pin (plain stores, fast tier): a pool
+    holding one worst-case chain at a time forces the long resident row
+    to be preempted (spilled to the host store) for each short arrival
+    and resumed after — and every request's outputs are bitwise
+    identical to the same trace through a big never-preempting pool.
+    The queue head's TTFT must beat the no-preemption wait on the same
+    tight pool, the host spill store must drain, and every step (spill
+    and restore included) must compile exactly once."""
+    cfg, params = model
+    big, big_reqs = _run_swap_trace(cfg, params, num_blocks=40, swap=False)
+    assert big.summary()["preemptions"] == 0
+    tight, tight_reqs = _run_swap_trace(cfg, params, num_blocks=9,
+                                        swap=False)
+    swap, swap_reqs = _run_swap_trace(cfg, params, num_blocks=9, swap=True)
+    s = swap.summary()
+    assert s["preemptions"] >= 1 and s["swap_resumes"] >= 1
+    assert s["swap_out_blocks"] >= 1          # a mid-generation victim:
+    assert s["swap_in_blocks"] >= 1           # real bytes spilled+restored
+    assert [r.output for r in swap_reqs] == [r.output for r in big_reqs]
+    # the interactive queue head stops waiting behind the long row
+    assert (swap_reqs[1].ttft_cycles < tight_reqs[1].ttft_cycles)
+    # zero recompiles: one trace per step, spill/restore included
+    assert all(c == 1 for c in swap.trace_counts.values()), \
+        swap.trace_counts
+    assert swap.trace_counts["spill"] == 1
+    assert swap.trace_counts["restore"] == 1
+    # drained: no chain left host-side, no swapped key in the pool
+    assert len(swap.spill) == 0 and swap.pool.swapped_total == 0
+    assert s["peak_swapped_tokens"] > 0 and s["spill_peak_bytes"] > 0
+    assert swap.pool.allocated_total == 0 and swap.pool.reserved_total == 0
+    swap.pool.check_invariants()
+
+
+@pytest.mark.slow
+def test_swap_preempt_resume_lossless_packed(model):
+    """Same pin on the Cassandra-packed store (slow tier): spill and
+    restore are leaf-wise bit-copies of the spec+verif streams (never
+    decoded), so preempt-then-resume stays bitwise on packed pools."""
+    from repro.core.format import CassandraConfig
+    from repro.core.packing import format_params
+    cfg, params = model
+    cass = CassandraConfig(variant=1, gamma=GAMMA)
+    packed = format_params(params, cass)
+    big, big_reqs = _run_swap_trace(cfg, packed, cass=cass, num_blocks=40,
+                                    swap=False, long_new=12)
+    swap, swap_reqs = _run_swap_trace(cfg, packed, cass=cass, num_blocks=9,
+                                      swap=True, long_new=12)
+    s = swap.summary()
+    assert s["preemptions"] >= 1 and s["swap_out_blocks"] >= 1
+    assert [r.output for r in swap_reqs] == [r.output for r in big_reqs]
+    swap.pool.check_invariants()
+
+
+def test_swap_priority_orders_victims_and_admission(model):
+    """Lower-priority rows are preempted first; a higher-priority ready
+    request is admitted ahead of an earlier lower-priority one; and the
+    all-default-priority path stays plain FIFO (the bitwise-default
+    satellite: equal priorities reproduce the no-priority outputs)."""
+    cfg, params = model
+    # equal priorities == the FIFO baseline, bitwise
+    base, base_reqs = _run_swap_trace(cfg, params, num_blocks=9, swap=True)
+    zero, zero_reqs = _run_swap_trace(cfg, params, num_blocks=9, swap=True,
+                                      priorities=[0, 0, 0])
+    assert [r.output for r in zero_reqs] == [r.output for r in base_reqs]
+    # a HIGH-priority long row resists preemption: the short heads now
+    # have lower priority than the resident, so nothing may be swapped
+    high, high_reqs = _run_swap_trace(cfg, params, num_blocks=9, swap=True,
+                                      priorities=[1, 0, 0])
+    assert high.summary()["preemptions"] == 0
+    # outputs are unchanged either way (losslessness is policy-free)
+    assert [r.output for r in high_reqs] == [r.output for r in base_reqs]
+    # priority also reorders admission among READY requests: two same-
+    # arrival requests admit high-priority-first, beating submit order
+    prompts, max_news, _ = _oversub_trace(cfg)
+    sched = Scheduler(cfg, params, cass=None, ecfg=EngineConfig(gamma=GAMMA),
+                      num_slots=1, s_max=8 + 16 + GAMMA + 1,
+                      rt_extra={"ssm_chunk": 8}, paged=True, block_size=4)
+    lo = sched.submit(prompts[1], max_new=4, arrival=0.0, priority=0)
+    hi = sched.submit(prompts[2], max_new=4, arrival=0.0, priority=5)
+    sched.run()
+    assert hi.admitted_at < lo.admitted_at
+
+
+def test_swap_store_cap_stops_preemption(model):
+    """A full host spill store makes victims ineligible: preemption
+    stops (the head waits, as without swap) and no chain is ever
+    dropped — outputs stay identical to the big-pool run."""
+    cfg, params = model
+    big, big_reqs = _run_swap_trace(cfg, params, num_blocks=40, swap=False)
+    prompts, max_news, arrivals = _oversub_trace(cfg)
+    s_max = 8 + 16 + GAMMA + 1
+    sched = Scheduler(cfg, params, cass=None,
+                      ecfg=EngineConfig(gamma=GAMMA), num_slots=2,
+                      s_max=s_max, rt_extra={"ssm_chunk": 8}, paged=True,
+                      block_size=4, num_blocks=9, swap=True,
+                      swap_store_blocks=blocks_needed(s_max, 4))
+    reqs = [sched.submit(p, max_new=mn, arrival=a)
+            for p, mn, a in zip(prompts, max_news, arrivals)]
+    sched.run()
+    # at most one chain fits the store at a time; everything completes
+    # and the outputs still match the big-pool run exactly
+    assert len(reqs) == len(sched.finished)
+    assert [r.output for r in reqs] == [r.output for r in big_reqs]
+    assert sched.spill.peak_blocks <= blocks_needed(s_max, 4)
+    assert len(sched.spill) == 0
+    sched.pool.check_invariants()
+
+
+def test_prefix_cache_persists_across_reset(model):
+    """ROADMAP follow-up satellite: parked chains survive
+    ``Scheduler.reset()`` — a header prefilled in run 1 is a warm hit in
+    run 2, with bitwise-identical outputs and strictly fewer prefill
+    tokens computed."""
+    cfg, params = model
+    prompts = _shared_header_trace(cfg, GAMMA)
+    bs = GAMMA + 1
+    s_max = max(len(p) for p in prompts) + MAX_NEW + GAMMA + 1
+    s_max += (-s_max) % bs
+    sched = Scheduler(cfg, params, cass=None,
+                      ecfg=EngineConfig(gamma=GAMMA), num_slots=2,
+                      s_max=s_max, rt_extra={"ssm_chunk": 8}, paged=True,
+                      block_size=bs, chunk_size=bs, prefix_cache=True)
+    cold_reqs = [sched.submit(p, max_new=MAX_NEW, arrival=2.0 * i)
+                 for i, p in enumerate(prompts)]
+    sched.run()
+    cold = sched.summary()
+    cold_outs = [r.output for r in cold_reqs]
+    assert sched.pool.parked_total > 0
+    sched.reset()
+    # the index survived the reset: same pool object, chains parked
+    assert sched.pool.parked_total > 0 and len(sched.prefix) > 0
+    warm_reqs = [sched.submit(p, max_new=MAX_NEW, arrival=2.0 * i)
+                 for i, p in enumerate(prompts)]
+    sched.run()
+    warm = sched.summary()
+    assert [r.output for r in warm_reqs] == cold_outs
+    # the FIRST request of the warm run already hits the parked header
+    assert warm["prefix_hits"] > cold["prefix_hits"]
+    assert warm["prefill_tokens"] < cold["prefill_tokens"]
+    sched.pool.check_invariants()
+    sched.prefix.check_invariants()
+
+
+def test_bucket_wall_times_exposed(model, spec_sched):
+    """Cost-model refresh seed satellite: ``summary()`` exposes measured
+    per-bucket wall times for every step the run used, in the same
+    bucket names ``trace_counts`` uses."""
+    cfg, _ = model
+    spec_sched.reset()
+    spec_sched.eos_id = None
+    reqs = [spec_sched.submit(p, max_new=MAX_NEW, arrival=i / 2.0)
+            for i, p in enumerate(_prompts(cfg, 3))]
+    spec_sched.run()
+    walls = spec_sched.summary()["bucket_wall_ms"]
+    assert "unified" in walls
+    for name, w in walls.items():
+        assert w["calls"] >= 1
+        assert w["total_ms"] > 0
+        assert w["mean_ms"] == pytest.approx(w["total_ms"] / w["calls"])
+    # every traced step that ran has a measured wall-time bucket
+    assert set(spec_sched.trace_counts) <= set(walls) | {"cow"}
+
+
+def test_swap_knob_validation(model):
+    """Preemption knob combinations fail fast at construction."""
+    cfg, params = model
+
+    def mk(**kw):
+        kw.setdefault("rt_extra", {"ssm_chunk": 8})
+        kw.setdefault("num_slots", 2)
+        kw.setdefault("s_max", S_MAX)
+        return Scheduler(cfg, params, ecfg=EngineConfig(gamma=GAMMA), **kw)
+
+    with pytest.raises(ValueError, match="paged"):
+        mk(swap=True)                         # swap needs the paged layout
+    with pytest.raises(ValueError, match="swap_store_blocks"):
+        mk(swap_store_blocks=4)               # cap without swap
+    with pytest.raises(ValueError, match="one full row chain"):
+        mk(paged=True, swap=True, block_size=4, swap_store_blocks=1)
+    ssm_cfg = get_config("falcon-mamba-7b", smoke=True)
+    with pytest.raises(ValueError, match="SSM|recurrent"):
+        Scheduler(ssm_cfg, None, ecfg=EngineConfig(gamma=GAMMA),
+                  num_slots=2, s_max=S_MAX, paged=True, swap=True,
+                  block_size=4)
+
+
 # -- MoE serving parity ------------------------------------------------------
 
 
