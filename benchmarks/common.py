@@ -14,7 +14,6 @@ import os
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.format import CassandraConfig
@@ -35,7 +34,7 @@ def _skip_layer_acceptance(cfg, params, skip_attn=0.5, skip_ffn=0.25,
     comparable coarseness (skipping whole branches of layer 1).
     """
     import jax.numpy as jnp
-    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving.engine import Engine
 
     # draft = copy of params with later layers' wo/w_down zeroed (branch off)
     def zero_branch(node, path=""):

@@ -7,7 +7,6 @@ KV tensors captured from a forward pass.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import bitops, coding

@@ -132,7 +132,7 @@ def run_paged_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     residency per MB and per-request output identity (lossless paging)."""
     lens = [int(x) for x in args.mixed_lens.split(",")]
     key = jax.random.PRNGKey(args.seed + 2)
-    prompts = [np.asarray(jax.random.randint(
+    prompts = [jax.device_get(jax.random.randint(
         jax.random.fold_in(key, i), (lens[i % len(lens)],), 0,
         cfg.vocab_size)) for i in range(args.requests)]
     s_max = max(lens) + args.max_new + args.gamma + 1
@@ -198,7 +198,7 @@ def run_prefix_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     header_len = args.prefix_header - args.prefix_header % block
     n = args.prefix_requests
     key = jax.random.PRNGKey(args.seed + 3)
-    header = np.asarray(jax.random.randint(
+    header = jax.device_get(jax.random.randint(
         jax.random.fold_in(key, 1000), (header_len,), 0, cfg.vocab_size))
     prompts, sharer = [], []
     for i in range(n):
@@ -206,13 +206,13 @@ def run_prefix_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
         # full-prefix hit (header + 1 token) the TTFT gate measures
         if i % 10 < 7 or i == n - 1:
             tail_len = 1 if i == n - 1 else 2 * block
-            tail = np.asarray(jax.random.randint(
+            tail = jax.device_get(jax.random.randint(
                 jax.random.fold_in(key, i), (tail_len,), 0,
                 cfg.vocab_size))
             prompts.append(np.concatenate([header, tail]))
             sharer.append(True)
         else:                              # 30% cold traffic
-            prompts.append(np.asarray(jax.random.randint(
+            prompts.append(jax.device_get(jax.random.randint(
                 jax.random.fold_in(key, i), (6 * block,), 0,
                 cfg.vocab_size)))
             sharer.append(False)
@@ -317,13 +317,13 @@ def run_oversub_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     long_new = 4 * args.max_new
     prompts, max_news, arrivals, prios = [], [], [], []
     for i in range(n_long):
-        prompts.append(np.asarray(jax.random.randint(
+        prompts.append(jax.device_get(jax.random.randint(
             jax.random.fold_in(key, i), (2 * block,), 0, cfg.vocab_size)))
         max_news.append(long_new)
         arrivals.append(0.0)
         prios.append(0)
     for i in range(n_short):
-        prompts.append(np.asarray(jax.random.randint(
+        prompts.append(jax.device_get(jax.random.randint(
             jax.random.fold_in(key, 100 + i), (2 * block,), 0,
             cfg.vocab_size)))
         max_news.append(args.max_new)
@@ -493,7 +493,7 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed + 1)
     lens = [max(4, args.prompt_len * f // 4) for f in (4, 2, 3, 6)]
     max_news = [max(4, args.max_new * f // 4) for f in (4, 6, 3, 5)]
-    prompts = [np.asarray(jax.random.randint(
+    prompts = [jax.device_get(jax.random.randint(
         jax.random.fold_in(key, i), (lens[i % len(lens)],), 0,
         cfg.vocab_size)) for i in range(args.requests)]
     req_max_new = [max_news[i % len(max_news)]

@@ -14,7 +14,6 @@ executed with ``lax.scan`` so HLO size stays O(pattern), not O(depth).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax.numpy as jnp
 from jax import ShapeDtypeStruct

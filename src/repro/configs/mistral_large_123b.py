@@ -1,4 +1,6 @@
-"""mistral-large-123b [dense] — GQA. [hf:mistralai/Mistral-Large-Instruct-2407; unverified]"""
+"""mistral-large-123b [dense] — GQA.
+
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]"""
 from repro.configs.base import ModelConfig
 
 CONFIG = ModelConfig(

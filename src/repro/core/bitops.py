@@ -89,10 +89,12 @@ def unpack_nibbles(packed: jax.Array) -> jax.Array:
     """Inverse of :func:`pack_nibbles`."""
     lo = packed & 0xF
     hi = (packed >> 4) & 0xF
-    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1).astype(jnp.uint8)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], -1).astype(jnp.uint8)
 
 
-def pack_codes(codes: jax.Array, width: int, n_bits: int | None = None) -> jax.Array:
+def pack_codes(codes: jax.Array, width: int,
+               n_bits: int | None = None) -> jax.Array:
     """Pack (..., K) integer codes of ``width`` bits each into uint32 words.
 
     ``n_bits`` (default: K*width rounded up to 32) fixes the region size so

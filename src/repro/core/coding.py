@@ -71,14 +71,16 @@ def build_codebook(exps: jax.Array) -> tuple[jax.Array, jax.Array]:
 # Mode 0: unary coding (paper-faithful, lossless)
 # ---------------------------------------------------------------------------
 
-def unary_encode_block(ranks: jax.Array, n_bits: int) -> tuple[jax.Array, jax.Array]:
+def unary_encode_block(ranks: jax.Array,
+                       n_bits: int) -> tuple[jax.Array, jax.Array]:
     """Encode ranks (..., K) into a unary bitstream (..., n_bits) of bools.
 
     Returns ``(bits, ok)`` where ``ok`` marks blocks whose stream fits in the
     region AND whose ranks are all < MAX_RANK.
     """
     lens = ranks.astype(jnp.int32) + 1
-    ends = jnp.cumsum(lens, axis=-1) - 1          # position of each code's terminating 1
+    # position of each code's terminating 1
+    ends = jnp.cumsum(lens, axis=-1) - 1
     total = ends[..., -1] + 1
     ok = (total <= n_bits) & jnp.all(ranks < MAX_RANK, axis=-1)
     # scatter 1s at `ends` (clipped; invalid blocks are discarded by `ok`)

@@ -529,7 +529,7 @@ class Engine:
                 res, cache = self._spec(self.params, cache, cur, sub)
                 buf, count = self._scatter(buf, count, res.tokens,
                                            res.valid, res.n_accepted + 1)
-                n = np.asarray(res.n_accepted)
+                n = jax.device_get(res.n_accepted)
                 committed += n + 1
                 accepted += int(n[active].sum())
                 drafted += self.ecfg.gamma * int(active.sum())
@@ -546,7 +546,7 @@ class Engine:
         # overshoot max_new while slow rows catch up, and those dropped
         # tokens must not inflate throughput; prefill-argmax token is not a
         # decode-cycle product either
-        delivered = np.asarray(count, np.int64)
+        delivered = jax.device_get(count).astype(np.int64)
         stats = {"cycles": cycles,
                  "tokens_per_cycle": float(delivered.mean() - 1)
                  / max(cycles, 1),

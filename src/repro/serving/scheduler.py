@@ -79,6 +79,7 @@ decode — the serving baseline for ``benchmarks/throughput.py``.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 from functools import partial
@@ -242,7 +243,8 @@ class Scheduler:
                  prefix_cache: bool = False,
                  prefix_cache_blocks: int | None = None,
                  swap: bool = False,
-                 swap_store_blocks: int | None = None):
+                 swap_store_blocks: int | None = None,
+                 debug_invariants: int | None = None):
         if cfg.frontend:
             raise NotImplementedError(
                 "scheduler admission is token-prompt only for now")
@@ -277,6 +279,14 @@ class Scheduler:
         self.prefix_cache_blocks = prefix_cache_blocks
         self.swap = swap
         self.swap_store_blocks = swap_store_blocks
+        # run the cross-registry check_invariants() every N steps
+        # (0 = off). Defaults from REPRO_DEBUG_INVARIANTS so the test
+        # suite turns it on globally (tests/conftest.py) without every
+        # construction site opting in.
+        if debug_invariants is None:
+            env = os.environ.get("REPRO_DEBUG_INVARIANTS", "")
+            debug_invariants = int(env) if env else 0
+        self.debug_invariants = int(debug_invariants)
         self.rt = Runtime(cfg=cfg, cass=cass,
                           view="target" if cass else "plain", **rt_extra)
         packed = cass is not None
@@ -358,6 +368,7 @@ class Scheduler:
         self.step_walls: dict[str, list] = {}
         self._next_rid = 0
         self._next_swap_key = 0
+        self._steps_since_check = 0
         self.prefix: PrefixCache | None = None
         self._pending_cow: list[tuple[int, int]] = []
         if self.paged:
@@ -520,6 +531,7 @@ class Scheduler:
             # the executable so the stamped wall time covers the real
             # host->device transfer + scatter (the cost-model seed the
             # other buckets measure), not just dispatch
+            # speclint: disable=sync-block(stamp the restore, not its dispatch)
             jax.block_until_ready(self.cache["length"])
             self._stamp_wall("restore", t0)
         self.row_blocks[slot] = blocks
@@ -639,7 +651,10 @@ class Scheduler:
         n_res = blocks_needed(int(self.lengths[slot]), self.block_size)
         vec = np.full(self.max_blocks, TRASH_BLOCK, np.int32)
         vec[:n_res] = self.row_blocks[slot][:n_res]
-        key = self._next_swap_key
+        # mint an opaque token disjoint from slot-index owners: a bare
+        # int would collide with slot 0/1 in the pool's reservation maps
+        # and trip its swapped-key invariants
+        key = ("swap", self._next_swap_key)
         self._next_swap_key += 1
         t0 = time.time()
         data = self._spill(self.cache, jnp.asarray(vec))
@@ -916,7 +931,7 @@ class Scheduler:
         last, self.cache = self._chunk(self.params, self.cache,
                                        jnp.asarray(tokens),
                                        jnp.asarray(valid))
-        last = np.asarray(last)
+        last = jax.device_get(last)
         self._stamp_wall("chunk", t0)
         for r in prefilling:
             r.pos += int(valid[r.slot])
@@ -1027,11 +1042,14 @@ class Scheduler:
             self.params, self.cache, jnp.asarray(self.cur),
             jnp.asarray(plan.chunk_tokens), jnp.asarray(plan.prefill_valid),
             jnp.asarray(plan.decode_mask), sub)
+        # the cycle's one sanctioned sync: bound the step-wall stamp at
+        # the step's completion, before the host-side harvest
+        # speclint: disable=sync-block(the one sanctioned per-cycle sync)
         jax.block_until_ready(res.tokens)
         self._stamp_wall("unified", t0)
         # harvest prefill rows
         if plan.prefilling:
-            last = np.asarray(last)
+            last = jax.device_get(last)
             for r in plan.prefilling:
                 v = int(plan.prefill_valid[r.slot])
                 r.pos += v
@@ -1045,12 +1063,11 @@ class Scheduler:
             self.stats["peak_prefill_tokens_per_cycle"] = max(
                 self.stats["peak_prefill_tokens_per_cycle"],
                 int(plan.prefill_valid.sum()))
-        # harvest decode rows
+        # harvest decode rows — ONE batched transfer for the cycle's
+        # results, not four implicit per-array syncs
         if plan.decoding:
-            tokens = np.asarray(res.tokens)
-            valid = np.asarray(res.valid)
-            n = np.asarray(res.n_accepted)
-            nxt = np.asarray(res.next_token)
+            tokens, valid, n, nxt = jax.device_get(
+                (res.tokens, res.valid, res.n_accepted, res.next_token))
             for r in plan.decoding:
                 self._harvest_decode_row(r, tokens, valid, n, nxt)
             dmask = plan.decode_mask
@@ -1061,6 +1078,24 @@ class Scheduler:
         self.clock += 1.0
         return True
 
+    # -- invariants --------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        """Cross-registry structural sanity: allocator refcounts and
+        reservations, prefix trie <-> pool sync, and spill store <->
+        swapped-key sync. Cheap (host-side dict scans) — ``step()``
+        runs it every ``debug_invariants`` cycles when the knob is on
+        (the test suite enables it via REPRO_DEBUG_INVARIANTS)."""
+        if not self.paged:
+            return
+        self.pool.check_invariants()
+        if self.prefix is not None:
+            self.prefix.check_invariants()
+        if self.spill is not None:
+            assert set(self.pool.swapped_keys()) == \
+                set(self.spill.keys()), \
+                "spill store out of sync with allocator swapped keys"
+
     # -- decode ------------------------------------------------------------
 
     def step(self) -> bool:
@@ -1069,6 +1104,11 @@ class Scheduler:
         decode cycle (``fused=False`` and the autoregressive baseline).
         Returns False when there was nothing to do (idle or all arrivals
         in the future)."""
+        if self.debug_invariants > 0 and self.paged:
+            self._steps_since_check += 1
+            if self._steps_since_check >= self.debug_invariants:
+                self._steps_since_check = 0
+                self.check_invariants()
         self._admit_ready()
         if self.fused:
             return self._fused_step()
@@ -1096,17 +1136,15 @@ class Scheduler:
         if self.speculative:
             res, self.cache = self._spec(self.params, self.cache, cur,
                                          sub, act)
-            tokens = np.asarray(res.tokens)
-            valid = np.asarray(res.valid)
-            n = np.asarray(res.n_accepted)
-            nxt = np.asarray(res.next_token)
+            tokens, valid, n, nxt = jax.device_get(
+                (res.tokens, res.valid, res.n_accepted, res.next_token))
             self.stats["accepted"] += int(n[active].sum())
             self.stats["drafted"] += self.ecfg.gamma * int(active.sum())
             self._stamp_wall("spec", t0)
         else:
             nxt_dev, self.cache = self._auto(self.params, self.cache, cur,
                                              sub, act)
-            nxt = np.asarray(nxt_dev)
+            nxt = jax.device_get(nxt_dev)
             tokens = nxt[:, None]
             valid = np.ones_like(tokens, bool)
             n = np.zeros(self.num_slots, np.int64)

@@ -100,6 +100,10 @@ class SpillStore:
     def __contains__(self, key) -> bool:
         return key in self._chains
 
+    def keys(self):
+        """Keys of every held chain (allocator<->store sync checks)."""
+        return self._chains.keys()
+
     @property
     def blocks(self) -> int:
         return sum(c.n_blocks for c in self._chains.values())

@@ -1,0 +1,11 @@
+"""Suite-wide defaults.
+
+Turn on the scheduler's periodic cross-registry invariant check for
+every test that builds a ``Scheduler`` (every 4 serving cycles:
+allocator refcounts/partition, prefix trie <-> pool sync, spill store
+<-> swapped-key sync). Construction sites can still opt out with an
+explicit ``debug_invariants=0``.
+"""
+import os
+
+os.environ.setdefault("REPRO_DEBUG_INVARIANTS", "4")

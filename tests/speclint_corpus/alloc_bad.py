@@ -1,0 +1,13 @@
+"""Seeded TRUE POSITIVES for the allocator-discipline rules: acquired
+blocks leaked, no release side anywhere in the file, and a shared
+(prefix-matched) block used as a copy destination."""
+
+
+class Sched:
+    def admit(self, slot, match):
+        self.pool.reserve(slot, 4)        # [expect] alloc-unpaired
+        self.pool.alloc(slot)             # [expect] alloc-leak alloc-unpaired
+        blk = self.pool.cow(slot, match.partial.block)  # [expect] alloc-leak alloc-unpaired
+        self._pending_cow.append(         # [expect] alloc-shared-write
+            (match.partial.block, match.partial.block))
+        return slot

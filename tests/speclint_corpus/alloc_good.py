@@ -1,0 +1,25 @@
+"""CLEAN-PASS corpus for the allocator-discipline rules: every
+acquisition published and paired, CoW used for the shared-block copy."""
+
+
+class Sched:
+    def admit(self, slot, match):
+        self.pool.reserve(slot, 4)
+        blocks = []
+        for node in match.nodes:
+            self.pool.share(slot, node.block)
+            blocks.append(node.block)
+        dst = self.pool.cow(slot, match.partial.block)
+        self._pending_cow.append((match.partial.block, dst))
+        blocks.append(self.pool.alloc(slot))
+        self.table[slot] = blocks
+        return blocks
+
+    def retire(self, slot):
+        self.pool.release(slot)
+
+    def preempt(self, slot, key):
+        self.pool.swap_out(slot, key, 2)
+
+    def resume(self, key, slot):
+        self.pool.swap_in(key, slot, 2)

@@ -1,0 +1,12 @@
+"""Bare-disable corpus: a suppression without a reason must not
+suppress, and is itself a finding (suppress-bare). Expected findings
+(hardcoded in tests/test_speclint.py, not inline-marked, because the
+line already carries the directive under test): suppress-bare AND the
+original sync-coerce, both on the int() line."""
+
+
+class Sched:
+    def step(self, params):
+        res = self._spec(params, self.cache)
+        n = int(res.n_accepted)  # speclint: disable=sync-coerce
+        return n

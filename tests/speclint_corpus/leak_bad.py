@@ -1,0 +1,11 @@
+"""Seeded TRUE POSITIVES for the trace-leak rule: jit results stored
+into host-authoritative scheduler/request state."""
+
+
+class Sched:
+    def step(self, params, req):
+        res = self._spec(params, self.cache)
+        self.lengths[0] = res.n_accepted          # [expect] leak-host-state
+        self.last_tokens = res.tokens             # [expect] leak-host-state
+        req.cur = res.next_token                  # [expect] leak-host-state
+        self.pending.append(res.next_token)       # [expect] leak-host-state

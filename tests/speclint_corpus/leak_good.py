@@ -1,0 +1,15 @@
+"""CLEAN-PASS corpus for the trace-leak rule: device state lives in the
+whitelisted attrs, host state gets converted values only."""
+import jax
+import numpy as np
+
+
+class Sched:
+    def step(self, params):
+        res = self._spec(params, self.cache)
+        self.cache = self._cow(self.cache, res.tokens)   # device attr
+        n = jax.device_get(res.n_accepted)
+        self.lengths[0] = int(n[0])
+        self.key, sub = jax.random.split(self.key)       # device attr
+        self.history.append(np.asarray(n))               # host -> host
+        return sub

@@ -1,0 +1,13 @@
+"""Seeded TRUE POSITIVES for the recompile-hazard rule: jit entry
+points called with per-request-shaped arguments."""
+import numpy as np
+
+
+class Sched:
+    def step(self, reqs, buckets):
+        pad = [0] * len(reqs)
+        self._chunk(self.params, self.cache, pad)         # [expect] recompile-arg
+        self._spec(self.params, np.zeros(len(reqs)))      # [expect] recompile-arg
+        self._unified(self.params, buckets[f"w{len(reqs)}"])  # [expect] recompile-arg
+        tail = reqs[0].tokens
+        self._auto(self.params, tail[:len(tail)])         # [expect] recompile-arg

@@ -1,0 +1,14 @@
+"""CLEAN-PASS corpus for the recompile-hazard rule: every jit argument
+is shaped by fixed bucket constants (config attrs, np.full over
+scheduler state, comprehensions over fixed slot lists)."""
+import numpy as np
+
+
+class Sched:
+    def step(self, plan):
+        vec = np.full(self.max_blocks, 0, np.int32)
+        active = np.array([r is not None for r in self.slots])
+        self._spec(self.params, self.cache, vec, active)
+        self._unified(self.params, plan.chunk_tokens)
+        k = self.num_slots
+        self._chunk(self.params, np.zeros((k, 4), np.int32))

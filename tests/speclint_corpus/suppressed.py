@@ -1,0 +1,14 @@
+"""Suppression corpus: real violations, each excused with a reasoned
+inline directive — speclint must report NOTHING here, and the two
+suppressions must be counted as used."""
+import jax
+
+
+class Sched:
+    def timed_step(self, params):
+        res = self._spec(params, self.cache)
+        # timing the dispatched step is the point of this probe
+        # speclint: disable=sync-block(measure the real step wall time)
+        jax.block_until_ready(res.tokens)
+        n = int(res.n_accepted)  # speclint: disable=sync-coerce(single sanctioned harvest)
+        return n

@@ -1,0 +1,22 @@
+"""Seeded TRUE POSITIVES for the host-sync rules.
+
+Each "expect" marker comment names the finding speclint must raise on
+that exact line (asserted by tests/test_speclint.py). This module is
+lint corpus, not runnable code.
+"""
+import jax
+import numpy as np
+
+
+class Sched:
+    def step(self, params):
+        res = self._spec(params, self.cache)
+        n = int(res.n_accepted)                   # [expect] sync-coerce
+        k = res.tokens.item()                     # [expect] sync-item
+        toks = np.asarray(res.tokens)             # [expect] sync-asarray
+        if res.valid:                             # [expect] sync-truthy
+            n += 1
+        jax.block_until_ready(res.tokens)         # [expect] sync-block
+        while res.n_accepted:                     # [expect] sync-truthy
+            break
+        return n, k, toks

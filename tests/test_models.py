@@ -1,7 +1,6 @@
 """Per-arch smoke tests: reduced configs, forward/train/prefill/decode,
 shape + finiteness asserts, cache-consistency between full-seq and
 incremental decode."""
-import dataclasses
 
 import numpy as np
 import pytest

@@ -903,3 +903,74 @@ def test_autoregressive_matches_speculative(model, spec_sched, auto_sched):
     spec_tpc = spec_sched.summary()["tokens_per_cycle"]
     assert auto_tpc <= auto_sched.num_slots + 1e-9
     assert spec_tpc > auto_tpc
+
+
+def test_randomized_trace_compiles_each_step_once(model):
+    """Seeded randomized schedules: several rounds of mixed traces —
+    shared headers (prefix hits + copy-on-write), cold prompts, varied
+    lengths/budgets/arrivals, and a pool tight enough to preempt — must
+    never grow any compile bucket past one. ``trace_counts`` persists
+    across ``reset()``, so a recompile in ANY round fails the assert;
+    this is the speclint recompile-arg contract checked dynamically."""
+    cfg, params = model
+    rng = np.random.default_rng(2026)
+    bs = GAMMA + 1
+    key = jax.random.PRNGKey(77)
+    headers = [np.asarray(jax.random.randint(jax.random.fold_in(key, h),
+                                             (2 * bs,), 0, cfg.vocab_size))
+               for h in range(2)]
+    long_new = 12
+    s_max = 4 * bs + long_new + GAMMA + 1    # max prompt is header+tail
+    s_max += (-s_max) % bs
+    # one worst-case chain + a little: shorts must wait behind the long
+    # resident, making it a preemption victim
+    sched = Scheduler(cfg, params, cass=None,
+                      ecfg=EngineConfig(gamma=GAMMA), num_slots=2,
+                      s_max=s_max, rt_extra={"ssm_chunk": 8}, paged=True,
+                      block_size=bs, chunk_size=bs, prefix_cache=True,
+                      swap=True, num_blocks=blocks_needed(s_max, bs) + 3)
+    for _ in range(3):
+        sched.reset()
+        for i in range(5):
+            tail_len = int(rng.integers(1, 2 * bs + 1))
+            tail = rng.integers(0, cfg.vocab_size, tail_len)
+            if rng.random() < 0.7:           # sharer: warm header path
+                prompt = np.concatenate(
+                    [headers[int(rng.integers(2))], tail])
+            else:                            # cold prompt
+                prompt = rng.integers(0, cfg.vocab_size, 2 * bs + tail_len)
+            if i == 0:                       # long low-priority resident
+                max_new, priority, arrival = long_new, 0, 0.0
+            else:                            # short interactive arrivals
+                max_new = int(rng.integers(2, 7))
+                priority = 1
+                arrival = 0.5 + float(rng.random() * 2.0)
+            sched.submit(prompt.astype(np.int32), max_new=max_new,
+                         arrival=arrival, priority=priority)
+        sched.run()
+    counts = sched.trace_counts
+    assert all(c == 1 for c in counts.values()), counts
+    assert counts.get("unified", 0) == 1
+    # the schedule really exercised the mixed regimes it claims to
+    assert sched.summary()["prefix_hits"] >= 1
+    assert sched.summary()["preemptions"] >= 1 and "spill" in counts
+    sched.check_invariants()
+
+
+def test_invariant_check_catches_pool_corruption(model):
+    """The ``debug_invariants`` knob (satellite of the speclint PR):
+    with the periodic check armed every step, hand-corrupting the
+    allocator's free list makes the very next ``step()`` raise instead
+    of silently serving from inconsistent state."""
+    cfg, params = model
+    sched = Scheduler(cfg, params, cass=None,
+                      ecfg=EngineConfig(gamma=GAMMA), num_slots=2,
+                      s_max=S_MAX, rt_extra={"ssm_chunk": 8}, paged=True,
+                      block_size=4, debug_invariants=1)
+    prompts = _prompts(cfg, 2)
+    for p in prompts:
+        sched.submit(p, max_new=MAX_NEW)
+    assert sched.step()                      # healthy state passes
+    sched.pool._free.append(sched.pool._free[-1])   # duplicate a block
+    with pytest.raises(AssertionError):
+        sched.step()

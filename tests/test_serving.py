@@ -161,7 +161,6 @@ def test_commit_rollback_lengths():
     eng = Engine(cfg, packed, cass=cass, ecfg=EngineConfig(gamma=2),
                  rt_extra={"ssm_chunk": 8})
     from repro.serving import kvcache as KC
-    from repro.models import forward_prefill
     b = 3
     prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (b, 8),
                                            0, cfg.vocab_size)}

@@ -1,6 +1,5 @@
 """Sharding rules: specs valid on a mesh, packed leaves inherit layouts,
 collective-bytes parser, int8 grad exchange algebra."""
-import re
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,29 @@
+"""speclint: repo-specific static analysis for the serving stack.
+
+Four AST pass families (stdlib ``ast`` only) enforce the contracts the
+Cassandra serving stack's performance rests on:
+
+* ``hostsync``   — no implicit host<->device syncs in the serving loop
+                   (``sync-item``/``sync-coerce``/``sync-asarray``/
+                   ``sync-truthy``/``sync-block``)
+* ``recompile``  — jit entry points take fixed-bucket-shaped arguments,
+                   never per-request-shaped Python values
+                   (``recompile-arg``)
+* ``allocator``  — BlockAllocator acquisitions are paired with their
+                   release side and shared blocks are never written
+                   (``alloc-unpaired``/``alloc-leak``/
+                   ``alloc-shared-write``)
+* ``traceleak``  — jnp arrays never land in host-authoritative state
+                   (``leak-host-state``)
+
+CLI: ``python -m tools.speclint src/``. Inline suppressions:
+``# speclint: disable=RULE(reason)`` — a reason is mandatory
+(``suppress-bare`` otherwise). A checked-in baseline
+(``tools/speclint/baseline.json``) grandfathers findings by
+(path, rule, source-line context).
+"""
+from tools.speclint.config import Config, RULES
+from tools.speclint.findings import Finding
+from tools.speclint.runner import Report, run_speclint
+
+__all__ = ["Config", "RULES", "Finding", "Report", "run_speclint"]

@@ -1,0 +1,65 @@
+"""CLI: ``python -m tools.speclint src/ [benchmarks/ ...]``.
+
+Exit 0 when every finding is fixed, suppressed-with-reason, or
+baselined; exit 1 otherwise. ``--write-baseline`` snapshots the current
+findings into the baseline file (bulk rule rollouts only — the shipped
+baseline is empty by policy).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from tools.speclint import baseline as baseline_mod
+from tools.speclint.config import RULES, Config
+from tools.speclint.runner import run_speclint
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.speclint",
+        description="serving-stack contract linter (host-sync, "
+                    "recompile, allocator, trace-leak passes)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to scan (default: src)")
+    ap.add_argument("--baseline", type=pathlib.Path,
+                    default=baseline_mod.DEFAULT_PATH,
+                    help="baseline JSON (default: the checked-in one)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="snapshot current findings into --baseline")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, (summary, hint) in sorted(RULES.items()):
+            print(f"{rule:>20}  {summary}")
+            print(f"{'':>20}  fix: {hint}")
+        return 0
+
+    root = pathlib.Path.cwd()
+    base = baseline_mod.Baseline([]) if (args.no_baseline
+                                         or args.write_baseline) \
+        else baseline_mod.Baseline.load(args.baseline)
+    report = run_speclint(args.paths or ["src"], Config(), root, base)
+
+    if args.write_baseline:
+        baseline_mod.write(args.baseline, report.findings)
+        print(f"speclint: wrote {len(report.findings)} entries to "
+              f"{args.baseline}")
+        return 0
+
+    for f in report.findings:
+        print(f.render())
+    tail = (f"{report.files_scanned} files, "
+            f"{len(report.findings)} findings "
+            f"({report.suppressed} suppressed, "
+            f"{report.baselined} baselined)")
+    print(f"speclint: {tail}")
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

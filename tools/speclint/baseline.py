@@ -1,0 +1,49 @@
+"""Checked-in baseline: grandfathered findings.
+
+Entries match on (path, rule, stripped source line) — line-number
+drift from unrelated edits does not invalidate the baseline, but any
+edit to the flagged line itself resurfaces the finding. The shipped
+``tools/speclint/baseline.json`` is empty by policy: today's tree is
+fixed or inline-suppressed; the mechanism exists for future bulk rule
+additions.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import pathlib
+
+from tools.speclint.findings import Finding
+
+DEFAULT_PATH = pathlib.Path(__file__).with_name("baseline.json")
+
+
+class Baseline:
+    def __init__(self, entries: list[dict] | None = None):
+        # multiset: N identical entries absorb N identical findings
+        self._budget: collections.Counter = collections.Counter(
+            (e["path"], e["rule"], e["context"])
+            for e in (entries or []))
+        self.absorbed = 0
+
+    @classmethod
+    def load(cls, path: pathlib.Path) -> "Baseline":
+        if not path.exists():
+            return cls([])
+        data = json.loads(path.read_text())
+        return cls(data.get("entries", []))
+
+    def absorbs(self, f: Finding) -> bool:
+        key = (f.path, f.rule, f.context)
+        if self._budget.get(key, 0) > 0:
+            self._budget[key] -= 1
+            self.absorbed += 1
+            return True
+        return False
+
+
+def write(path: pathlib.Path, findings: list[Finding]) -> None:
+    entries = [{"path": f.path, "rule": f.rule, "context": f.context}
+               for f in sorted(findings)]
+    path.write_text(json.dumps({"version": 1, "entries": entries},
+                               indent=2) + "\n")

@@ -1,0 +1,92 @@
+"""Rule registry and analysis configuration.
+
+The defaults encode this repo's conventions (scheduler/engine jit entry
+attributes, the device-side ``Scheduler`` attributes, which files count
+as serving hot path). Tests override ``all_files=True`` so the corpus
+under ``tests/speclint_corpus/`` is scanned by every pass regardless of
+its path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# rule id -> (summary, fix hint). The hint is printed with every finding.
+RULES: dict[str, tuple[str, str]] = {
+    "sync-item": (
+        ".item() on a jit-traced value blocks on the device",
+        "batch the cycle's results through one jax.device_get(...)"),
+    "sync-coerce": (
+        "int()/float()/bool() of a jit-traced value forces a host sync",
+        "convert once via jax.device_get, then coerce the numpy result"),
+    "sync-asarray": (
+        "numpy consuming a jit-traced array is an implicit device sync",
+        "use jax.device_get for the one sanctioned per-cycle transfer"),
+    "sync-truthy": (
+        "implicit bool() of a jit-traced value in if/while/assert",
+        "decide on host-side state, or device_get once and branch on it"),
+    "sync-block": (
+        "block_until_ready on a traced value inside the serving path",
+        "keep only the one sanctioned post-step sync; suppress with a "
+        "reason if this is it"),
+    "recompile-arg": (
+        "jit entry argument shaped by per-request Python values",
+        "pad into the fixed bucket shape (e.g. np.full(self.max_blocks, "
+        "TRASH_BLOCK)) before the call"),
+    "alloc-unpaired": (
+        "allocator acquisition with no matching release-side call in "
+        "this file",
+        "every reserve/alloc/share/cow needs release (or swap_out), "
+        "every swap_out needs swap_in/drop_swapped"),
+    "alloc-leak": (
+        "acquired block id is never published (table/list/return)",
+        "store the block in the owning row's table/block list so "
+        "release() can find it"),
+    "alloc-shared-write": (
+        "shared (refcount>1) block flows into a write destination",
+        "shared blocks are read-only: copy-on-write into a fresh "
+        "pool.cow() block instead"),
+    "leak-host-state": (
+        "jit-traced array stored into host-authoritative state",
+        "host state (lengths/cur/table/Request fields) must be numpy or "
+        "Python ints: jax.device_get first"),
+    "suppress-bare": (
+        "speclint suppression without a reason",
+        "write # speclint: disable=RULE(why this is intentional)"),
+    "parse-error": (
+        "file does not parse",
+        "fix the syntax error"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Knobs shared by every pass."""
+    # Scheduler/Engine attributes that hold jit-compiled entry points:
+    # a call through one of these produces traced values and is a
+    # recompile-hazard site.
+    jit_entry_attrs: frozenset = frozenset({
+        "_spec", "_auto", "_chunk", "_unified", "_cow", "_spill",
+        "_restore", "_prefill", "_scatter"})
+    # the only ``self.`` attributes allowed to hold device arrays
+    device_self_attrs: frozenset = frozenset({"cache", "key"})
+    # calls that move a traced value to host explicitly (sanctioned)
+    sanctioned_transfers: frozenset = frozenset({
+        "jax.device_get", "jax.experimental.multihost_utils"})
+    # scan every pass over every file (corpus tests)
+    all_files: bool = False
+
+    # -- per-pass path scopes (substring match on "/" + posix relpath).
+    # The seeded corpus is in-scope for every pass so the rule tests and
+    # the CLI see identical behavior.
+    hostsync_scope: tuple = ("/serving/", "/throughput.py",
+                             "/speclint_corpus/")
+    recompile_scope: tuple = ("/",)          # trigger is precise already
+    allocator_scope: tuple = ("/scheduler.py", "/prefixcache.py",
+                              "/speclint_corpus/")
+    traceleak_scope: tuple = ("/serving/", "/speclint_corpus/")
+
+    def in_scope(self, scope: tuple, relpath: str) -> bool:
+        if self.all_files:
+            return True
+        probe = "/" + relpath.replace("\\", "/")
+        return any(pat in probe for pat in scope)

@@ -1,0 +1,358 @@
+"""Order-sensitive taint analysis over one function (or module) body.
+
+Every expression is classified as one of three taints:
+
+* ``TRACED``  — dataflows from a jit-compiled entry point
+  (``self._spec(...)`` etc.), a ``jnp.*``/``jax.*`` constructor, or the
+  device-side ``self.cache``/``self.key`` state.
+* ``HOST``    — numpy/stdlib values, constants, explicit
+  ``jax.device_get`` transfers, and host-side ``self.*`` state.
+* ``UNKNOWN`` — parameters, foreign calls — treated conservatively
+  (never flagged: speclint only reports positive evidence).
+
+The walk is a two-sweep quasi-fixpoint: sweep 1 applies assignment
+effects in source order to seed loop-carried names; sweep 2 re-walks
+with a fresh environment (falling back to sweep 1's result for names
+not yet bound) and calls the pass hooks with the taint state *at that
+program point*, so ``x = traced; x = device_get(x); int(x)`` is clean
+while ``int(x)`` before the transfer is not.
+
+Passes subclass :class:`TaintVisitor` and override the hooks
+``on_call`` / ``on_test`` / ``on_store``.
+"""
+from __future__ import annotations
+
+import ast
+
+TRACED, HOST, UNKNOWN = "traced", "host", "unknown"
+_RANK = {HOST: 0, UNKNOWN: 1, TRACED: 2}
+
+# host-producing calls: sanctioned transfers + numpy constructors +
+# python coercions (the *sync* they imply is the hostsync pass's
+# business; their RESULT is host either way)
+_HOST_BUILTINS = frozenset({
+    "int", "float", "bool", "str", "len", "range", "min", "max", "sum",
+    "abs", "sorted", "enumerate", "zip", "list", "tuple", "set", "dict",
+    "print", "isinstance", "getattr", "repr"})
+_HOST_ROOTS = frozenset({"np", "numpy", "math", "time", "os", "json",
+                         "collections", "itertools"})
+# jax transforms return callables, not device data
+_CALLABLE_FACTORIES = frozenset({
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "functools.partial", "partial"})
+
+
+def join(*taints: str) -> str:
+    out = HOST
+    for t in taints:
+        if _RANK[t] > _RANK[out]:
+            out = t
+    return out
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``self.pool.alloc`` for a Name/Attribute chain, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def iter_functions(tree: ast.Module):
+    """Every function body in the module, plus the module body itself
+    (benchmark scripts run real code at module level)."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def own_nodes(func: ast.AST):
+    """All AST nodes of one function (or module) body, excluding nested
+    function/class scopes — those are visited by their own
+    :func:`iter_functions` entry."""
+    stack = list(getattr(func, "body", []))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class TaintVisitor:
+    """One function's taint walk; subclasses override the hooks."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self._now: dict[str, str] = {}
+        self._prior: dict[str, str] = {}
+
+    # -- hooks (overridden by passes) -----------------------------------
+
+    def on_call(self, node: ast.Call) -> None:
+        """Every Call site, with the env at that point."""
+
+    def on_test(self, expr: ast.expr, kind: str) -> None:
+        """if/while/assert condition."""
+
+    def on_store(self, target: ast.expr, value_taint: str,
+                 value: ast.expr, node: ast.stmt) -> None:
+        """Attribute/Subscript store target (host-structure writes)."""
+
+    # -- environment -----------------------------------------------------
+
+    def lookup(self, name: str) -> str:
+        if name in self._now:
+            return self._now[name]
+        return self._prior.get(name, UNKNOWN)
+
+    # -- classification --------------------------------------------------
+
+    def classify(self, e: ast.expr) -> str:
+        if isinstance(e, ast.Name):
+            return self.lookup(e.id)
+        if isinstance(e, ast.Constant):
+            return HOST
+        if isinstance(e, ast.Attribute):
+            d = dotted(e)
+            if d:
+                parts = d.split(".")
+                if parts[0] == "self" and len(parts) >= 2:
+                    return (TRACED if parts[1]
+                            in self.cfg.device_self_attrs else HOST)
+                if parts[0] in _HOST_ROOTS:
+                    return HOST
+            return self.classify(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.classify(e.value)
+        if isinstance(e, ast.Call):
+            return self._classify_call(e)
+        if isinstance(e, ast.BinOp):
+            return join(self.classify(e.left), self.classify(e.right))
+        if isinstance(e, ast.UnaryOp):
+            return self.classify(e.operand)
+        if isinstance(e, ast.BoolOp):
+            return join(*[self.classify(v) for v in e.values])
+        if isinstance(e, ast.Compare):
+            return join(self.classify(e.left),
+                        *[self.classify(c) for c in e.comparators])
+        if isinstance(e, ast.IfExp):
+            return join(self.classify(e.body), self.classify(e.orelse))
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return join(*[self.classify(x) for x in e.elts])
+        if isinstance(e, ast.Dict):
+            return join(*[self.classify(v) for v in e.values
+                          if v is not None])
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self.classify(e.elt)
+        if isinstance(e, ast.DictComp):
+            return join(self.classify(e.key), self.classify(e.value))
+        if isinstance(e, ast.JoinedStr):
+            return HOST
+        if isinstance(e, ast.Lambda):
+            return HOST
+        if isinstance(e, ast.Starred):
+            return self.classify(e.value)
+        return UNKNOWN
+
+    def _classify_call(self, e: ast.Call) -> str:
+        d = dotted(e.func)
+        if d:
+            parts = d.split(".")
+            last = parts[-1]
+            if d in _HOST_BUILTINS:
+                return HOST
+            if last in ("item", "tolist"):
+                return HOST
+            if d in _CALLABLE_FACTORIES:
+                return HOST
+            if d in self.cfg.sanctioned_transfers:
+                return HOST
+            if parts[0] in ("np", "numpy"):
+                return HOST
+            if (parts[0] == "self" and len(parts) == 2
+                    and parts[1] in self.cfg.jit_entry_attrs):
+                return TRACED
+            if d in ("jax.tree.map", "jax.tree_util.tree_map"):
+                # jax.tree.map(np.asarray, ...) is a host conversion;
+                # any other mapped fn keeps the tree device-side
+                f0 = dotted(e.args[0]) if e.args else None
+                if f0 and f0.split(".")[0] in ("np", "numpy"):
+                    return HOST
+                return TRACED
+            if d == "jax.block_until_ready":
+                return (self.classify(e.args[0]) if e.args else UNKNOWN)
+            if parts[0] in ("jnp", "jax", "lax"):
+                return TRACED
+            if parts[0] in _HOST_ROOTS:
+                return HOST
+        # method call: taint of the receiver carries through
+        # (traced.sum() is traced, host_arr.sum() is host)
+        if isinstance(e.func, ast.Attribute):
+            bt = self.classify(e.func.value)
+            if bt in (TRACED, HOST):
+                return bt
+        return UNKNOWN
+
+    # -- sweeps ----------------------------------------------------------
+
+    def run(self, func: ast.AST) -> None:
+        body = func.body if hasattr(func, "body") else []
+        self._now, self._prior = {}, {}
+        self._sweep(body, hooks=False)           # seed loop-carried defs
+        self._now, self._prior = {}, self._now
+        self._sweep(body, hooks=True)
+
+    def _sweep(self, body: list, hooks: bool) -> None:
+        for stmt in body:
+            self._do_stmt(stmt, hooks)
+
+    def _do_stmt(self, stmt: ast.stmt, hooks: bool) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                       # separate scope, analysed solo
+        if isinstance(stmt, ast.Assign):
+            if hooks:
+                self._scan(stmt.value)
+            t = self.classify(stmt.value)
+            for tgt in stmt.targets:
+                self._bind(tgt, t, stmt.value, stmt, hooks)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                if hooks:
+                    self._scan(stmt.value)
+                self._bind(stmt.target, self.classify(stmt.value),
+                           stmt.value, stmt, hooks)
+        elif isinstance(stmt, ast.AugAssign):
+            if hooks:
+                self._scan(stmt.value)
+            t = join(self.classify(stmt.target),
+                     self.classify(stmt.value))
+            self._bind(stmt.target, t, stmt.value, stmt, hooks)
+        elif isinstance(stmt, ast.For):
+            if hooks:
+                self._scan(stmt.iter)
+            self._bind(stmt.target, self.classify(stmt.iter),
+                       stmt.iter, stmt, hooks)
+            self._sweep(stmt.body, hooks)
+            self._sweep(stmt.orelse, hooks)
+        elif isinstance(stmt, ast.While):
+            if hooks:
+                self._scan(stmt.test)
+                self.on_test(stmt.test, "while")
+            self._sweep(stmt.body, hooks)
+            self._sweep(stmt.orelse, hooks)
+        elif isinstance(stmt, ast.If):
+            if hooks:
+                self._scan(stmt.test)
+                self.on_test(stmt.test, "if")
+            self._sweep(stmt.body, hooks)
+            self._sweep(stmt.orelse, hooks)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                if hooks:
+                    self._scan(item.context_expr)
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars,
+                               self.classify(item.context_expr),
+                               item.context_expr, stmt, hooks)
+            self._sweep(stmt.body, hooks)
+        elif isinstance(stmt, ast.Try):
+            self._sweep(stmt.body, hooks)
+            for h in stmt.handlers:
+                self._sweep(h.body, hooks)
+            self._sweep(stmt.orelse, hooks)
+            self._sweep(stmt.finalbody, hooks)
+        elif isinstance(stmt, ast.Assert):
+            if hooks:
+                self._scan(stmt.test)
+                self.on_test(stmt.test, "assert")
+        elif isinstance(stmt, (ast.Return, ast.Expr, ast.Raise,
+                               ast.Delete)):
+            if hooks:
+                for child in ast.iter_child_nodes(stmt):
+                    if isinstance(child, ast.expr):
+                        self._scan(child)
+        # imports/pass/global/break/continue: no dataflow effect
+
+    def _bind(self, target: ast.expr, taint: str, value: ast.expr,
+              stmt: ast.stmt, hooks: bool) -> None:
+        if isinstance(target, ast.Name):
+            self._now[target.id] = taint
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            elt_taints = None
+            if (isinstance(value, (ast.Tuple, ast.List))
+                    and len(value.elts) == len(target.elts)):
+                elt_taints = [self.classify(v) for v in value.elts]
+            for i, elt in enumerate(target.elts):
+                et = elt_taints[i] if elt_taints else taint
+                self._bind(elt, et, value, stmt, hooks)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, taint, value, stmt, hooks)
+        elif isinstance(target, (ast.Attribute, ast.Subscript)):
+            if hooks:
+                self.on_store(target, taint, value, stmt)
+
+    def _scan(self, expr: ast.expr) -> None:
+        """Visit every Call inside ``expr`` (inner-first), feeding the
+        pass's call hook."""
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                self.on_call(node)
+
+
+class NameDefs:
+    """name -> ordered [(lineno, value expr, via_tuple_unpack)] map for
+    one function — the recompile pass's one-level reaching-definition
+    helper."""
+
+    def __init__(self, func: ast.AST):
+        self.defs: dict[str, list[tuple[int, ast.expr, bool]]] = {}
+        stack = list(getattr(func, "body", []))
+        while stack:
+            stmt = stack.pop()
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    self._record(tgt, stmt.value, unpack=False)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value:
+                self._record(stmt.target, stmt.value, unpack=False)
+            elif isinstance(stmt, ast.For):
+                self._record(stmt.target, stmt.iter, unpack=True)
+            for field in ("body", "orelse", "finalbody"):
+                stack.extend(getattr(stmt, field, []) or [])
+            for h in getattr(stmt, "handlers", []) or []:
+                stack.extend(h.body)
+
+    def _record(self, target: ast.expr, value: ast.expr,
+                unpack: bool) -> None:
+        if isinstance(target, ast.Name):
+            self.defs.setdefault(target.id, []).append(
+                (target.lineno, value, unpack))
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for i, elt in enumerate(target.elts):
+                if (isinstance(value, (ast.Tuple, ast.List))
+                        and len(value.elts) == len(target.elts)):
+                    self._record(elt, value.elts[i], unpack=False)
+                else:
+                    self._record(elt, value, unpack=True)
+
+    def creation(self, name: str, before_line: int) -> ast.expr | None:
+        """Nearest definition at or before ``before_line`` (else the
+        last one — loop-carried), or None for parameters/closures."""
+        cands = self.defs.get(name)
+        if not cands:
+            return None
+        best = None
+        for lineno, value, _unpack in sorted(cands):
+            if lineno <= before_line:
+                best = value
+        if best is None:
+            best = sorted(cands)[-1][1]
+        return best

@@ -1,0 +1,35 @@
+"""Structured findings: (file, line, rule, message, hint)."""
+from __future__ import annotations
+
+import dataclasses
+
+from tools.speclint.config import RULES
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str               # repo-relative posix path
+    line: int
+    rule: str
+    message: str
+    context: str = ""       # stripped source line (baseline matching)
+
+    @property
+    def hint(self) -> str:
+        return RULES.get(self.rule, ("", ""))[1]
+
+    def render(self) -> str:
+        out = f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+def make_finding(path: str, node, rule: str, message: str,
+                 source_lines: list[str]) -> Finding:
+    line = getattr(node, "lineno", 0)
+    ctx = ""
+    if 1 <= line <= len(source_lines):
+        ctx = source_lines[line - 1].strip()
+    return Finding(path=path, line=line, rule=rule, message=message,
+                   context=ctx)

@@ -1,0 +1,12 @@
+"""Pass registry: each pass is ``(name, scope attr, run fn)`` where
+``run(tree, path, source_lines, cfg) -> list[Finding]``."""
+from tools.speclint.passes import (allocator, hostsync, recompile,
+                                   traceleak)
+
+# (pass name, Config scope attribute, module)
+ALL_PASSES = (
+    ("hostsync", "hostsync_scope", hostsync.run),
+    ("recompile", "recompile_scope", recompile.run),
+    ("allocator", "allocator_scope", allocator.run),
+    ("traceleak", "traceleak_scope", traceleak.run),
+)

@@ -1,0 +1,174 @@
+"""Allocator-discipline pass.
+
+``BlockAllocator`` acquisitions (``reserve``/``alloc``/``share``/
+``cow``/``swap_out``/``swap_in`` through a ``pool``/``alloc``-named
+receiver) obey two structural contracts:
+
+* every acquisition family present in a file must have its release
+  side in the same file (``alloc-unpaired``) — release/park paths live
+  next to the acquisition paths they balance;
+* a value-returning acquisition (``alloc``/``cow`` return a block id)
+  must be *published* — stored into a table/list, passed on, or
+  returned — or ``release(slot)`` can never find the block
+  (``alloc-leak``). Nested acquisition
+  (``blocks.append(self.pool.alloc(...))``) publishes by construction.
+
+And the sharing contract: a shared (refcount>1) block — anything
+matched out of the prefix trie (``node.block`` / ``m.partial.block``)
+or pinned via ``share`` — must never flow into a write destination:
+the dst operand of ``copy_pool_blocks``/``self._cow``/
+``restore_pool_blocks``, or the dst element of a
+``_pending_cow.append((src, dst))`` tuple (``alloc-shared-write``).
+Only a fresh ``pool.cow()``/``pool.alloc()`` result may be written.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.speclint.dataflow import NameDefs, dotted, iter_functions, \
+    own_nodes
+from tools.speclint.findings import make_finding
+
+_ACQ_VALUE = frozenset({"alloc", "cow"})     # return a block id
+_ACQ_ALL = frozenset({"reserve", "alloc", "share", "cow", "swap_out",
+                      "swap_in"})
+# acquisition -> methods that balance it (anywhere in the same file)
+_PAIR = {
+    "reserve": {"release", "swap_out"},
+    "alloc": {"release", "swap_out"},
+    "share": {"release", "swap_out"},
+    "cow": {"release", "swap_out"},
+    "swap_in": {"release", "swap_out"},
+    "swap_out": {"swap_in", "drop_swapped"},
+}
+# write sinks: callable suffix -> index of the dst argument
+_WRITE_SINKS = {"copy_pool_blocks": 2, "restore_pool_blocks": 1,
+                "_cow": 2, "_restore": 2}
+
+
+def _alloc_receiver(func_expr: ast.expr) -> str | None:
+    """Method name when called on an allocator-ish receiver."""
+    if not isinstance(func_expr, ast.Attribute):
+        return None
+    recv = dotted(func_expr.value)
+    if recv and any("pool" in seg or "alloc" in seg
+                    for seg in recv.split(".")):
+        return func_expr.attr
+    return None
+
+
+def _is_shared_origin(e: ast.expr, defs: NameDefs, line: int,
+                      depth: int = 0) -> bool:
+    """Does this expression carry a prefix-shared block id?"""
+    if depth > 6:
+        return False
+    if isinstance(e, ast.Name):
+        creation = defs.creation(e.id, line)
+        if creation is None:
+            return False
+        if isinstance(creation, ast.Call):
+            meth = _alloc_receiver(creation.func)
+            if meth in ("alloc", "cow"):
+                return False            # fresh private block
+        return _is_shared_origin(creation, defs, line, depth + 1)
+    return any(isinstance(n, ast.Attribute) and n.attr == "block"
+               for n in ast.walk(e))
+
+
+def _uses_name(stmt: ast.stmt, name: str) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == name
+               for n in ast.walk(stmt))
+
+
+def _check_leaks(func, path, source_lines, findings) -> None:
+    """Discarded / never-published alloc()/cow() results."""
+
+    def walk_body(body: list) -> None:
+        for i, stmt in enumerate(body):
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            # (a) bare-expression acquisition: block id dropped
+            if isinstance(stmt, ast.Expr) and isinstance(stmt.value,
+                                                         ast.Call):
+                meth = _alloc_receiver(stmt.value.func)
+                if meth in _ACQ_VALUE:
+                    findings.append(make_finding(
+                        path, stmt, "alloc-leak",
+                        f"{meth}() result discarded — the block id is "
+                        "unreachable", source_lines))
+            # (b) bound but never referenced again
+            if (isinstance(stmt, ast.Assign)
+                    and isinstance(stmt.value, ast.Call)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)):
+                meth = _alloc_receiver(stmt.value.func)
+                if meth in _ACQ_VALUE:
+                    name = stmt.targets[0].id
+                    if not any(_uses_name(later, name)
+                               for later in body[i + 1:]):
+                        findings.append(make_finding(
+                            path, stmt, "alloc-leak",
+                            f"{meth}() block bound to '{name}' but "
+                            "never published", source_lines))
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field, None)
+                if sub:
+                    walk_body(sub)
+            for h in getattr(stmt, "handlers", []) or []:
+                walk_body(h.body)
+
+    walk_body(getattr(func, "body", []))
+
+
+def run(tree: ast.Module, path: str, source_lines: list[str], cfg):
+    findings = []
+    # file-level acquisition/release inventory
+    first_acq: dict[str, ast.Call] = {}
+    released: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            meth = _alloc_receiver(node.func)
+            if meth in _ACQ_ALL and meth not in first_acq:
+                first_acq[meth] = node
+            if meth in ("release", "swap_out", "swap_in",
+                        "drop_swapped", "drop_cached"):
+                released.add(meth)
+    for meth, node in sorted(first_acq.items(),
+                             key=lambda kv: kv[1].lineno):
+        if not (_PAIR[meth] & released):
+            want = "/".join(sorted(_PAIR[meth]))
+            findings.append(make_finding(
+                path, node, "alloc-unpaired",
+                f"{meth}() acquisitions have no {want} in this file",
+                source_lines))
+
+    for func in iter_functions(tree):
+        defs = NameDefs(func)
+        _check_leaks(func, path, source_lines, findings)
+        for node in own_nodes(func):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            # shared block into an explicit write sink
+            if d:
+                sink = _WRITE_SINKS.get(d.split(".")[-1])
+                if sink is not None and len(node.args) > sink:
+                    dst = node.args[sink]
+                    if _is_shared_origin(dst, defs, node.lineno):
+                        findings.append(make_finding(
+                            path, node, "alloc-shared-write",
+                            "shared block used as a write destination",
+                            source_lines))
+            # shared block as the dst of a pending CoW pair
+            if (d and d.split(".")[-1] == "append"
+                    and "_pending_cow" in d and node.args
+                    and isinstance(node.args[0], ast.Tuple)
+                    and len(node.args[0].elts) == 2):
+                dst = node.args[0].elts[1]
+                if _is_shared_origin(dst, defs, node.lineno):
+                    findings.append(make_finding(
+                        path, node, "alloc-shared-write",
+                        "pending-CoW dst is a shared block (src/dst "
+                        "swapped?)", source_lines))
+    return findings

@@ -1,0 +1,71 @@
+"""Host-sync detector.
+
+The serving loop's budget is ONE sanctioned device sync per cycle (the
+post-step ``jax.device_get`` harvest). Anything else that implicitly
+materialises a traced value on host — ``.item()``, ``int()`` coercions,
+numpy functions consuming device arrays, truthiness of a traced value,
+stray ``block_until_ready`` — serialises the dispatch pipeline and is
+flagged here.
+
+Rules: ``sync-item``, ``sync-coerce``, ``sync-asarray``,
+``sync-truthy``, ``sync-block``.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.speclint.dataflow import (TRACED, TaintVisitor, dotted,
+                                     iter_functions)
+from tools.speclint.findings import make_finding
+
+_COERCIONS = frozenset({"int", "float", "bool"})
+
+
+class _HostSync(TaintVisitor):
+    def __init__(self, cfg, path, source_lines):
+        super().__init__(cfg)
+        self.path, self.lines = path, source_lines
+        self.findings = []
+
+    def _flag(self, node, rule, message):
+        self.findings.append(
+            make_finding(self.path, node, rule, message, self.lines))
+
+    def on_call(self, node: ast.Call) -> None:
+        d = dotted(node.func)
+        if not d:
+            return
+        parts = d.split(".")
+        if parts[-1] == "item" and len(parts) > 1:
+            if self.classify(node.func.value) == TRACED:
+                self._flag(node, "sync-item",
+                           f"{d}() blocks on the traced value")
+            return
+        if d in _COERCIONS and node.args:
+            if self.classify(node.args[0]) == TRACED:
+                self._flag(node, "sync-coerce",
+                           f"{d}() of a traced value is a device sync")
+            return
+        if parts[0] in ("np", "numpy") and any(
+                self.classify(a) == TRACED for a in node.args):
+            self._flag(node, "sync-asarray",
+                       f"{d}() consumes a traced array (implicit sync)")
+            return
+        if parts[-1] == "block_until_ready" and node.args:
+            if self.classify(node.args[0]) == TRACED:
+                self._flag(node, "sync-block",
+                           "block_until_ready on a traced value")
+
+    def on_test(self, expr: ast.expr, kind: str) -> None:
+        if self.classify(expr) == TRACED:
+            self._flag(expr, "sync-truthy",
+                       f"{kind} condition bool()s a traced value")
+
+
+def run(tree: ast.Module, path: str, source_lines: list[str], cfg):
+    findings = []
+    for func in iter_functions(tree):
+        v = _HostSync(cfg, path, source_lines)
+        v.run(func)
+        findings.extend(v.findings)
+    return findings

@@ -1,0 +1,146 @@
+"""Recompile-hazard detector — the static complement of
+``Scheduler.trace_counts``.
+
+A jit'd entry point retraces whenever an argument's shape changes, so
+every argument at a ``self._spec(...)``-style call site must be shaped
+by *fixed bucket constants* (``self.max_blocks``, ``np.full`` with a
+config-derived shape, the engine's own fixed-shape outputs) — never by
+per-request Python values. This pass flags positive evidence of
+request-shaped arguments: ``len(...)``, variable-length slices,
+non-constant subscripts (dict/list lookups keyed on request state),
+f-strings, and bare list literals/comprehensions over non-config data.
+Name arguments are resolved one definition back (nearest reaching def)
+so the ``vec = np.full(...); self._spill(..., jnp.asarray(vec))`` idiom
+is recognised as bucket-shaped.
+
+Rule: ``recompile-arg``.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.speclint.dataflow import (NameDefs, dotted, iter_functions,
+                                     own_nodes)
+from tools.speclint.findings import make_finding
+
+_STATIC_NP_CTORS = frozenset({"full", "zeros", "ones", "empty"})
+_WRAPPERS = frozenset({"jnp.asarray", "jnp.array", "np.asarray",
+                       "np.array", "jax.device_put"})
+_MAX_DEPTH = 8
+
+
+def _const_slice(sl: ast.expr) -> bool:
+    """Is this subscript index/slice made of constants only?"""
+    if isinstance(sl, ast.Slice):
+        return all(p is None or isinstance(p, ast.Constant)
+                   for p in (sl.lower, sl.upper, sl.step))
+    if isinstance(sl, ast.Tuple):
+        return all(_const_slice(e) for e in sl.elts)
+    if isinstance(sl, ast.Constant):
+        return True
+    if isinstance(sl, ast.UnaryOp) and isinstance(sl.operand,
+                                                  ast.Constant):
+        return True
+    return False
+
+
+class _ShapeCheck:
+    """Positive-evidence classifier: returns the hazard reason for an
+    expression whose shape depends on per-request values, else None."""
+
+    def __init__(self, defs: NameDefs, use_line: int):
+        self.defs = defs
+        self.use_line = use_line
+        self.seen: set[str] = set()
+
+    def hazard(self, e: ast.expr, depth: int = 0) -> str | None:
+        if depth > _MAX_DEPTH:
+            return None
+        if isinstance(e, (ast.Constant, ast.Attribute)):
+            return None                 # config/self state is static
+        if isinstance(e, ast.Name):
+            if e.id in self.seen:
+                return None
+            self.seen.add(e.id)
+            creation = self.defs.creation(e.id, self.use_line)
+            if creation is None:
+                return None             # parameter/closure: trust it
+            return self.hazard(creation, depth + 1)
+        if isinstance(e, ast.Call):
+            return self._call_hazard(e, depth)
+        if isinstance(e, ast.Subscript):
+            if not _const_slice(e.slice):
+                return ("variable-length slice / per-request lookup "
+                        "shapes this argument")
+            return self.hazard(e.value, depth + 1)
+        if isinstance(e, ast.JoinedStr):
+            return "f-string derived from per-request state"
+        if isinstance(e, (ast.ListComp, ast.GeneratorExp, ast.SetComp)):
+            # comprehensions over fixed scheduler state (self.slots,
+            # range(config)) have config-determined length; anything
+            # else is per-request-shaped
+            for gen in e.generators:
+                it = gen.iter
+                d = dotted(it)
+                if d and d.startswith("self."):
+                    continue
+                if (isinstance(it, ast.Call)
+                        and dotted(it.func) in ("range", "enumerate")
+                        and not any(self.hazard(a, depth + 1)
+                                    for a in it.args)):
+                    continue
+                return ("comprehension over per-request data shapes "
+                        "this argument")
+            return None
+        if isinstance(e, ast.List):
+            return "bare list literal (length is per-request)"
+        if isinstance(e, (ast.Tuple, ast.BinOp)):
+            for child in ast.iter_child_nodes(e):
+                if isinstance(child, ast.expr):
+                    h = self.hazard(child, depth + 1)
+                    if h:
+                        return h
+            return None
+        if isinstance(e, ast.IfExp):
+            return (self.hazard(e.body, depth + 1)
+                    or self.hazard(e.orelse, depth + 1))
+        return None
+
+    def _call_hazard(self, e: ast.Call, depth: int) -> str | None:
+        d = dotted(e.func)
+        if d == "len" or (d and d.endswith(".len")):
+            return "len() of per-request data shapes this argument"
+        if d in _WRAPPERS and e.args:
+            return self.hazard(e.args[0], depth + 1)
+        if d and d.split(".")[0] in ("np", "jnp", "numpy"):
+            last = d.split(".")[-1]
+            if last in _STATIC_NP_CTORS and e.args:
+                # the SHAPE argument decides the bucket
+                return self.hazard(e.args[0], depth + 1)
+            if last in ("asarray", "array") and e.args:
+                return self.hazard(e.args[0], depth + 1)
+        return None                     # foreign calls: fixed outputs
+
+
+def run(tree: ast.Module, path: str, source_lines: list[str], cfg):
+    findings = []
+    for func in iter_functions(tree):
+        defs = NameDefs(func)
+        for node in own_nodes(func):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if not d:
+                continue
+            parts = d.split(".")
+            if not (parts[0] == "self" and len(parts) == 2
+                    and parts[1] in cfg.jit_entry_attrs):
+                continue
+            for arg in list(node.args) + [k.value for k in
+                                          node.keywords]:
+                why = _ShapeCheck(defs, node.lineno).hazard(arg)
+                if why:
+                    findings.append(make_finding(
+                        path, node, "recompile-arg",
+                        f"{d}(...) argument: {why}", source_lines))
+    return findings

@@ -1,0 +1,85 @@
+"""Trace-leak pass: the host-authoritative-state rule.
+
+Scheduler planning state (``self.lengths``/``self.cur``/``self.table``,
+``Request`` fields, stats dicts) must hold Python ints / numpy arrays —
+never live jax arrays. A traced value stored there turns every later
+planning read into an implicit device sync *and* pins device buffers
+from the host. The only ``self.*`` attributes allowed to hold device
+arrays are the configured device attrs (``cache``/``key``).
+
+Rule: ``leak-host-state``. Flagged stores:
+
+* ``self.X = traced`` / ``self.X[...] = traced`` for X outside the
+  device set;
+* ``obj.field = traced`` on any non-self object (Request fields);
+* ``self.X.append/extend/insert(traced)`` on host-side collections.
+
+Dict-building of device trees through plain locals
+(``out["length"] = jnp.where(...)``) is deliberately NOT flagged —
+that is how jit-side code assembles cache pytrees.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.speclint.dataflow import (TRACED, TaintVisitor, dotted,
+                                     iter_functions)
+from tools.speclint.findings import make_finding
+
+_MUTATORS = frozenset({"append", "extend", "insert", "add",
+                       "appendleft", "setdefault"})
+
+
+class _TraceLeak(TaintVisitor):
+    def __init__(self, cfg, path, source_lines):
+        super().__init__(cfg)
+        self.path, self.lines = path, source_lines
+        self.findings = []
+
+    def _flag(self, node, message):
+        self.findings.append(make_finding(
+            self.path, node, "leak-host-state", message, self.lines))
+
+    def on_store(self, target, value_taint, value, node) -> None:
+        if value_taint != TRACED:
+            return
+        # self.table[slot] = x strips to self.table; req.pos stays whole
+        base = target.value if isinstance(target, ast.Subscript) \
+            else target
+        d = dotted(base)
+        if not d:
+            return
+        parts = d.split(".")
+        if parts[0] == "self":
+            if len(parts) >= 2 and parts[1] in \
+                    self.cfg.device_self_attrs:
+                return
+            self._flag(node,
+                       f"traced value stored into host state '{d}'")
+        elif isinstance(target, ast.Attribute):
+            # attribute store on a host object (Request fields etc.);
+            # subscript stores on locals build device pytrees — allowed
+            self._flag(node, f"traced value stored into '{d}' "
+                             f"(host object field)")
+
+    def on_call(self, node: ast.Call) -> None:
+        d = dotted(node.func)
+        if not d:
+            return
+        parts = d.split(".")
+        if (parts[0] == "self" and len(parts) >= 3
+                and parts[-1] in _MUTATORS
+                and parts[1] not in self.cfg.device_self_attrs):
+            if any(self.classify(a) == TRACED for a in node.args):
+                self._flag(node,
+                           f"traced value {parts[-1]}ed into host "
+                           f"collection '{'.'.join(parts[:-1])}'")
+
+
+def run(tree: ast.Module, path: str, source_lines: list[str], cfg):
+    findings = []
+    for func in iter_functions(tree):
+        v = _TraceLeak(cfg, path, source_lines)
+        v.run(func)
+        findings.extend(v.findings)
+    return findings

@@ -1,0 +1,85 @@
+"""File discovery + per-file pass orchestration."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+
+from tools.speclint import baseline as baseline_mod
+from tools.speclint import suppress
+from tools.speclint.config import Config
+from tools.speclint.findings import Finding
+from tools.speclint.passes import ALL_PASSES
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding]          # unsuppressed, unbaselined
+    suppressed: int
+    baselined: int
+    files_scanned: int
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+
+def discover(paths: list[str], root: pathlib.Path) -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for p in paths:
+        path = (root / p) if not pathlib.Path(p).is_absolute() \
+            else pathlib.Path(p)
+        if path.is_file() and path.suffix == ".py":
+            files.append(path)
+        elif path.is_dir():
+            files.extend(sorted(path.rglob("*.py")))
+    return files
+
+
+def lint_file(path: pathlib.Path, relpath: str,
+              cfg: Config) -> tuple[list[Finding], suppress.Suppressions]:
+    source = path.read_text()
+    lines = source.splitlines()
+    sup = suppress.scan(relpath, lines)
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as exc:
+        return [Finding(path=relpath, line=exc.lineno or 0,
+                        rule="parse-error", message=str(exc.msg))], sup
+    findings: list[Finding] = []
+    for _name, scope_attr, run in ALL_PASSES:
+        if cfg.in_scope(getattr(cfg, scope_attr), relpath):
+            findings.extend(run(tree, relpath, lines, cfg))
+    return findings, sup
+
+
+def run_speclint(paths: list[str], cfg: Config | None = None,
+                 root: pathlib.Path | None = None,
+                 baseline: baseline_mod.Baseline | None = None
+                 ) -> Report:
+    cfg = cfg or Config()
+    root = root or pathlib.Path.cwd()
+    baseline = baseline or baseline_mod.Baseline([])
+    out: list[Finding] = []
+    suppressed = 0
+    files = discover(paths, root)
+    for path in files:
+        try:
+            relpath = path.resolve().relative_to(
+                root.resolve()).as_posix()
+        except ValueError:
+            relpath = path.as_posix()
+        findings, sup = lint_file(path, relpath, cfg)
+        for f in findings:
+            # a directive suppresses its own line; suppress.scan maps
+            # comment-only directive lines onto the following line
+            if f.rule != "suppress-bare" and \
+                    sup.suppresses(f.line, f.rule):
+                suppressed += 1
+                continue
+            if baseline.absorbs(f):
+                continue
+            out.append(f)
+        out.extend(sup.bare)             # bare disables: never excused
+    return Report(findings=sorted(out), suppressed=suppressed,
+                  baselined=baseline.absorbed, files_scanned=len(files))

@@ -1,0 +1,73 @@
+"""Inline suppressions: ``# speclint: disable=RULE(reason)``.
+
+A directive suppresses findings on its own line; a comment-only
+directive line suppresses the next source line (for calls too long to
+carry a trailing comment). Multiple rules are comma-separated. A
+disable without a ``(reason)`` never suppresses anything and is itself
+reported (``suppress-bare``) — the repo convention is that every
+suppression must justify itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from tools.speclint.findings import Finding
+
+_DIRECTIVE = re.compile(r"#\s*speclint:\s*disable=")
+# rule id, optionally followed by a parenthesised reason
+_ITEM = re.compile(r"([a-z][a-z0-9-]*)(?:\(([^()]*)\))?")
+
+
+@dataclasses.dataclass
+class Suppressions:
+    # line -> list of (rule, reason); only reasoned entries land here
+    by_line: dict[int, list[tuple[str, str]]]
+    bare: list[Finding]          # suppress-bare findings
+    used: int = 0
+
+    def suppresses(self, line: int, rule: str) -> bool:
+        for rl, _reason in self.by_line.get(line, []):
+            if rl == rule:
+                self.used += 1
+                return True
+        return False
+
+
+def _parse_items(tail: str) -> list[tuple[str, str | None]]:
+    """``sync-block(reason), other-rule`` -> [(rule, reason|None), ...].
+
+    Items must be adjacent up to comma/space separators: parsing stops
+    at the first stretch of unrelated text, so prose after the
+    directive is never misread as a rule id.
+    """
+    items: list[tuple[str, str | None]] = []
+    pos = 0
+    while True:
+        m = _ITEM.search(tail, pos)
+        if m is None or tail[pos:m.start()].strip(", \t"):
+            break
+        items.append((m.group(1), m.group(2)))
+        pos = m.end()
+    return items
+
+
+def scan(path: str, source_lines: list[str]) -> Suppressions:
+    by_line: dict[int, list[tuple[str, str]]] = {}
+    bare: list[Finding] = []
+    for i, raw in enumerate(source_lines, start=1):
+        m = _DIRECTIVE.search(raw)
+        if not m:
+            continue
+        # a directive on a comment-only line governs the NEXT line
+        target = i + 1 if raw.lstrip().startswith("#") else i
+        for rule, reason in _parse_items(raw[m.end():]):
+            if reason is None or not reason.strip():
+                bare.append(Finding(
+                    path=path, line=i, rule="suppress-bare",
+                    message=f"disable={rule} carries no reason",
+                    context=raw.strip()))
+            else:
+                by_line.setdefault(target, []).append(
+                    (rule, reason.strip()))
+    return Suppressions(by_line=by_line, bare=bare)
