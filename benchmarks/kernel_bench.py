@@ -65,10 +65,12 @@ def wallclock(print_fn=print):
             ("jnp_oracle", lambda: ref.draft_matmul_ref(x, spec, cass,
                                                         shape))):
         fn()  # warm
-        t0 = time.time()
+        # perf_counter: a clock step across time.time() would report a
+        # negative kernel wall time
+        t0 = time.perf_counter()
         for _ in range(3):
             jax.block_until_ready(fn())
-        dt = (time.time() - t0) / 3
+        dt = (time.perf_counter() - t0) / 3
         print_fn(f"kernel_wall,draft_matmul,{name},{dt*1e3:.1f}ms")
     return []
 

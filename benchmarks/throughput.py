@@ -38,9 +38,25 @@ least one preemption fires, the queue head's TTFT beats the
 no-preemption wait, host-spilled bytes are honestly reported, and every
 jit step (spill/restore included) compiles exactly once.
 
+``--slo`` replays a Poisson-arrival mixed-SLO trace (long deadline-free
+background generations saturating the slots + interactive requests with
+TTFT deadlines and ITL targets arriving at rate ``--slo-rate``) through
+ONE scheduler three ways: FIFO (``slo_aware`` off — the pre-SLO decision
+paths), SLO-aware (EDF admission + deadline-protecting preemption
+over the online measured cost model), and an all-default replay with no
+SLOs submitted. Deadlines are submitted in
+milliseconds through the warmup-measured cycle cost; the gate judges
+hits deterministically in cycle space. ``--slo-gate`` (nightly CI)
+hard-fails unless FIFO's deadline-hit rate is below 60% at this λ while
+SLO-aware scheduling hits >= 85%, per-request outputs are bitwise
+identical between the runs (scheduling only reorders work), an all-
+default (no-SLO) replay makes decision-for-decision the same schedule
+as FIFO (the bitwise-default pin), and every jit step still compiles
+exactly once across all runs.
+
   PYTHONPATH=src python benchmarks/throughput.py [--trained] \
       [--rates 1,4,16] [--fused-gate] [--paged] [--prefix-gate] \
-      [--swap-gate] [--out /tmp/throughput.json]
+      [--swap-gate] [--slo-gate] [--out /tmp/throughput.json]
 """
 import argparse
 import json
@@ -53,6 +69,7 @@ import jax
 from repro.configs import get_config
 from repro.core.format import CassandraConfig
 from repro.models import init_params
+from repro.serving.blockpool import blocks_needed
 from repro.serving.engine import EngineConfig
 from repro.serving.scheduler import Scheduler
 
@@ -69,9 +86,9 @@ def run_trace(sched: Scheduler, prompts, max_new, lam: float
     sched.reset()
     reqs = [sched.submit(p, max_new=mn, arrival=i / lam)
             for i, (p, mn) in enumerate(zip(prompts, max_new))]
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = sched.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     s = sched.summary()
     s["wall_s"] = dt
     s["tokens_per_s"] = s["committed"] / max(dt, 1e-9)
@@ -96,6 +113,10 @@ def check_fused_gate(report: dict) -> list:
         a = rows.get(("alternating", lam))
         if a is None:
             continue
+        # latency keys are None when nothing finished (latency_summary
+        # reports "no data" instead of raising) — treat as 0 here
+        f = {k: (v if v is not None else 0) for k, v in f.items()}
+        a = {k: (v if v is not None else 0) for k, v in a.items()}
         itl_better = (f["itl_cycles_p95"] < a["itl_cycles_p95"]
                       or (f["itl_cycles_p95"] == a["itl_cycles_p95"]
                           and f["itl_cycles_mean"] < a["itl_cycles_mean"]))
@@ -149,13 +170,13 @@ def run_paged_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
                           block_size=block)
         reqs = [sched.submit(p, max_new=args.max_new, arrival=i / 4.0)
                 for i, p in enumerate(prompts)]
-        t0 = time.time()
+        t0 = time.perf_counter()
         sched.run()
         s = sched.summary()
         s["fused"] = sched.fused
         bpt = _kv_bytes_per_token(sched)
         held_mb = s["peak_reserved_tokens"] * bpt / 1e6
-        s["wall_s"] = time.time() - t0
+        s["wall_s"] = time.perf_counter() - t0
         s["kv_bytes_per_token"] = bpt
         s["peak_kv_held_mb"] = held_mb
         s["resident_tokens_per_mb"] = (s["peak_resident_tokens"]
@@ -228,10 +249,10 @@ def run_prefix_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
                           chunk_size=block, prefix_cache=mode == "on")
         reqs = [sched.submit(p, max_new=args.max_new, arrival=4.0 * i)
                 for i, p in enumerate(prompts)]
-        t0 = time.time()
+        t0 = time.perf_counter()
         sched.run()
         s = sched.summary()
-        s["wall_s"] = time.time() - t0
+        s["wall_s"] = time.perf_counter() - t0
         s["trace_counts"] = dict(sched.trace_counts)
         out["runs"][mode] = s
         outputs[mode] = [r.output for r in reqs]
@@ -344,10 +365,10 @@ def run_oversub_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
         reqs = [sched.submit(p, max_new=mn, arrival=a, priority=pr)
                 for p, mn, a, pr in zip(prompts, max_news, arrivals,
                                         prios)]
-        t0 = time.time()
+        t0 = time.perf_counter()
         sched.run()
         s = sched.summary()
-        s["wall_s"] = time.time() - t0
+        s["wall_s"] = time.perf_counter() - t0
         s["num_blocks"] = num_blocks
         s["trace_counts"] = dict(sched.trace_counts)
         outs = [r.output for r in reqs]
@@ -415,6 +436,172 @@ def run_oversub_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     return out
 
 
+def run_slo_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
+    """Poisson-arrival mixed-SLO trace: FIFO vs SLO-aware goodput.
+
+    The trace is the deadline regime the SLO rewiring exists for: long
+    deadline-free background generations saturate the slots and the
+    queue from cycle 0, while short interactive requests with TTFT
+    deadlines (and ITL targets) arrive Poisson at ``--slo-rate``
+    requests per cycle. ONE scheduler (paged + swap, ``block == chunk ==
+    γ+1`` so preemption stays bitwise-safe) replays it three ways:
+
+    * **fifo** — ``slo_aware`` off: the pre-SLO decision paths. The
+      interactive requests queue behind the whole background backlog
+      (same priority, and SRPT blocks preemption for a FIFO head), so
+      their deadlines blow by tens of cycles.
+    * **slo** — ``slo_aware`` on: EDF admission jumps the feasible
+      deadlines over the deadline-free backlog, and the victim policy
+      swaps out a background row (costing zero goodput) to seat them.
+    * **default** — the same trace with NO SLOs submitted: must make
+      decision-for-decision the same schedule as the fifo run (the
+      all-default bitwise pin — SLO machinery never engages unasked).
+
+    Deadlines are *submitted* in milliseconds through the warmup-
+    measured cycle cost (the online model converts them back at the
+    decision points), but the gate judges hits deterministically in
+    cycle space: first token within ``--slo-deadline-cycles`` of
+    arrival, every inter-token gap within the ITL target. ``--slo-gate``
+    hard-fails unless FIFO's hit rate is < 60% at this λ while SLO-aware
+    hits >= 85%, outputs are bitwise identical across all three runs,
+    the default run reproduces FIFO's admission schedule, and every jit
+    step compiled exactly once across the whole replay."""
+    gamma = args.gamma
+    block = gamma + 1
+    rng = np.random.default_rng(args.seed + 6)
+    key = jax.random.PRNGKey(args.seed + 6)
+    # 4 slots: enough parallel service that the SLO-aware run can absorb
+    # λ interactive arrivals once it evicts the background rows — with 2
+    # slots the interactive backlog itself outgrows the deadline and no
+    # admission policy can save it
+    slots = 4
+    n_batch, n_inter = 2 * slots, args.slo_requests
+    long_new, inter_new = 4 * args.max_new, args.max_new
+    d_ttft = float(args.slo_deadline_cycles)    # cycles, gate units
+    d_itl = 4.0                                 # max inter-token gap, cycles
+    prompt_len = 2 * block
+    prompts, max_news, arrivals, kinds = [], [], [], []
+    for i in range(n_batch):
+        prompts.append(jax.device_get(jax.random.randint(
+            jax.random.fold_in(key, i), (prompt_len,), 0, cfg.vocab_size)))
+        max_news.append(long_new)
+        arrivals.append(0.0)
+        kinds.append("batch")
+    t = 4.0
+    for i in range(n_inter):
+        t += float(rng.exponential(1.0 / args.slo_rate))
+        prompts.append(jax.device_get(jax.random.randint(
+            jax.random.fold_in(key, 100 + i), (prompt_len,), 0,
+            cfg.vocab_size)))
+        max_news.append(inter_new)
+        arrivals.append(t)
+        kinds.append("interactive")
+    s_max = prompt_len + long_new + gamma + 1
+    s_max += (-s_max) % block
+    num_blocks = slots * blocks_needed(s_max, block) + 2
+    sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
+                      num_slots=slots, s_max=s_max, rt_extra=rt_extra,
+                      paged=True, block_size=block, chunk_size=block,
+                      num_blocks=num_blocks, swap=True)
+    # warmup: trace the chunk + unified buckets and seed the cost
+    # model's cycle<->ms exchange rate with real measurements, so the
+    # ms deadlines below correspond to the intended cycle budgets
+    for i in range(2):
+        sched.submit(prompts[n_batch + i], max_new=4, arrival=float(i))
+    sched.run()
+    cyc_ms = sched.cost.cycle_ms()
+
+    def one_run(slo_aware, with_slos):
+        sched.slo_aware = slo_aware
+        sched.reset()
+        reqs = []
+        for p, mn, a, kind in zip(prompts, max_news, arrivals, kinds):
+            slo = {}
+            if with_slos and kind == "interactive":
+                slo = {"ttft_deadline_ms": d_ttft * cyc_ms,
+                       "itl_target_ms": d_itl * cyc_ms}
+            reqs.append(sched.submit(p, max_new=mn, arrival=a, **slo))
+        t0 = time.perf_counter()
+        sched.run()
+        s = sched.summary()
+        s["wall_s"] = time.perf_counter() - t0
+        s["trace_counts"] = dict(sched.trace_counts)
+        return s, reqs
+
+    def hit(req, kind):
+        """Deterministic cycle-space SLO verdict for the gate."""
+        if kind != "interactive":
+            return None
+        if req.ttft_cycles is None or req.ttft_cycles > d_ttft:
+            return False
+        gaps = req.itl_cycles
+        return not (gaps.size and float(gaps.max()) > d_itl)
+
+    out = {"requests": len(prompts), "interactive": n_inter,
+           "slo_rate": args.slo_rate, "ttft_deadline_cycles": d_ttft,
+           "itl_target_cycles": d_itl, "cycle_ms_at_submit": cyc_ms,
+           "block_size": block, "num_blocks": num_blocks, "runs": {}}
+    results = {}
+    for mode, slo_aware, with_slos in (("fifo", False, True),
+                                       ("slo", True, True),
+                                       ("default", True, False)):
+        s, reqs = one_run(slo_aware, with_slos)
+        hits = [hit(r, k) for r, k in zip(reqs, kinds)]
+        n_hit = sum(1 for h in hits if h)
+        s["slo_hit_rate_cycle_space"] = n_hit / max(n_inter, 1)
+        ttfts = [r.ttft_cycles for r, k in zip(reqs, kinds)
+                 if k == "interactive"]
+        s["interactive_ttft_mean_cycles"] = float(np.mean(
+            [t for t in ttfts if t is not None] or [np.nan]))
+        out["runs"][mode] = s
+        results[mode] = ([r.output for r in reqs],
+                         [r.admitted_at for r in reqs])
+        if mode != "default":
+            print(f"[slo:{mode:>7}] deadline hits {n_hit}/{n_inter} "
+                  f"({s['slo_hit_rate_cycle_space']:.0%}), interactive "
+                  f"ttft mean={s['interactive_ttft_mean_cycles']:.1f}cyc, "
+                  f"preemptions={s['preemptions']}, "
+                  f"cycles={s['cycles']}")
+    fifo, slo = out["runs"]["fifo"], out["runs"]["slo"]
+    out["outputs_identical"] = (results["fifo"][0] == results["slo"][0]
+                                == results["default"][0])
+    out["default_matches_fifo_schedule"] = (
+        results["default"][1] == results["fifo"][1]
+        and out["runs"]["default"]["cycles"] == fifo["cycles"])
+    failures = []
+    if not out["outputs_identical"]:
+        failures.append("SLO scheduling is not lossless: per-request "
+                        "outputs differ between the fifo/slo/default runs")
+    if not out["default_matches_fifo_schedule"]:
+        failures.append("all-default run diverged from the pre-SLO FIFO "
+                        "schedule — the SLO machinery engaged unasked")
+    if fifo["slo_hit_rate_cycle_space"] >= 0.60:
+        failures.append(
+            f"FIFO hit rate {fifo['slo_hit_rate_cycle_space']:.0%} is not "
+            f"< 60% — λ={args.slo_rate} is not a regime where FIFO "
+            "misses badly, the gate discriminates nothing")
+    if slo["slo_hit_rate_cycle_space"] < 0.85:
+        failures.append(
+            f"SLO-aware hit rate {slo['slo_hit_rate_cycle_space']:.0%} "
+            "< 85% — goodput scheduling is not rescuing the deadlines")
+    for name, cnt in slo["trace_counts"].items():
+        if cnt > 1:
+            failures.append(f"step '{name}' traced {cnt}x across the "
+                            "replay — zero-recompile contract broken")
+    out["failures"] = failures
+    out["passed"] = not failures
+    print(f"[slo] hit rate fifo={fifo['slo_hit_rate_cycle_space']:.0%} → "
+          f"slo-aware={slo['slo_hit_rate_cycle_space']:.0%} at "
+          f"λ={args.slo_rate}/cycle (outputs identical: "
+          f"{out['outputs_identical']}, default≡fifo: "
+          f"{out['default_matches_fifo_schedule']}, cycle_ms="
+          f"{cyc_ms:.2f})")
+    for msg in failures:
+        print(f"[slo-gate] FAIL: {msg}")
+    del sched
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
@@ -456,6 +643,28 @@ def main(argv=None):
                     "preemption fires, the queue head's TTFT beats the "
                     "no-preemption wait, swapped bytes are reported, and "
                     "every step compiles exactly once (nightly gate)")
+    ap.add_argument("--slo", action="store_true",
+                    help="also replay a Poisson-arrival mixed-SLO trace "
+                    "(deadline-free background + interactive TTFT/ITL "
+                    "deadlines) with FIFO vs SLO-aware scheduling")
+    ap.add_argument("--slo-gate", action="store_true",
+                    help="fail the run unless, at --slo-rate, FIFO's "
+                    "deadline-hit rate is < 60%% while SLO-aware "
+                    "scheduling hits >= 85%%, outputs are bitwise "
+                    "identical across runs, the all-default replay "
+                    "matches the pre-SLO FIFO schedule, and every step "
+                    "compiles exactly once (nightly gate)")
+    ap.add_argument("--slo-rate", type=float, default=0.5,
+                    help="Poisson arrival rate of interactive SLO "
+                    "requests (requests per decode cycle) in the --slo "
+                    "trace")
+    ap.add_argument("--slo-requests", type=int, default=8,
+                    help="interactive SLO-carrying requests in the "
+                    "--slo trace (on top of 8 background generations)")
+    ap.add_argument("--slo-deadline-cycles", type=float, default=12,
+                    help="TTFT deadline (in decode cycles; submitted in "
+                    "ms through the measured cycle cost) for the --slo "
+                    "trace's interactive requests")
     ap.add_argument("--oversub-frac", type=float, default=0.6,
                     help="tight-pool size as a fraction of the big-pool "
                     "run's measured peak residency")
@@ -531,8 +740,8 @@ def main(argv=None):
             print(f"[{mode:>14}] λ={lam:<4g} tokens/s={s['tokens_per_s']:8.1f}"
                   f"  tokens/cycle={s['tokens_per_cycle']:5.2f}"
                   f"  cycles={s['cycles']:4d}"
-                  f"  ttft_p95={s.get('ttft_cycles_p95', 0):5.1f}cyc"
-                  f"  itl_p95={s.get('itl_cycles_p95', 0):4.1f}cyc"
+                  f"  ttft_p95={s.get('ttft_cycles_p95') or 0:5.1f}cyc"
+                  f"  itl_p95={s.get('itl_cycles_p95') or 0:4.1f}cyc"
                   f"  acceptance={s['acceptance']}")
         # one fused compile bucket must serve the whole λ sweep: every
         # admission/growth/retirement mix, with zero post-warmup recompiles
@@ -554,16 +763,19 @@ def main(argv=None):
     if args.oversub or args.swap_gate:
         report["oversub_compare"] = run_oversub_compare(
             cfg, packed, cass, ecfg, args, rt_extra)
+    if args.slo or args.slo_gate:
+        report["slo_compare"] = run_slo_compare(
+            cfg, packed, cass, ecfg, args, rt_extra)
     byl = {(r["mode"], r["lambda"]): r for r in report["runs"]}
     for lam in rates:
         f, a, ar = (byl[("fused", lam)], byl[("alternating", lam)],
                     byl[("autoregressive", lam)])
         print(f"λ={lam:<4g} fused vs alternating: "
               f"{f['tokens_per_cycle'] / max(a['tokens_per_cycle'], 1e-9):.2f}x"
-              f" tokens/cycle, itl_p95 {a.get('itl_cycles_p95', 0):.1f}→"
-              f"{f.get('itl_cycles_p95', 0):.1f}cyc, ttft_p95 "
-              f"{a.get('ttft_cycles_p95', 0):.1f}→"
-              f"{f.get('ttft_cycles_p95', 0):.1f}cyc "
+              f" tokens/cycle, itl_p95 {a.get('itl_cycles_p95') or 0:.1f}→"
+              f"{f.get('itl_cycles_p95') or 0:.1f}cyc, ttft_p95 "
+              f"{a.get('ttft_cycles_p95') or 0:.1f}→"
+              f"{f.get('ttft_cycles_p95') or 0:.1f}cyc "
               f"(spec vs AR: "
               f"{f['tokens_per_cycle'] / max(ar['tokens_per_cycle'], 1e-9):.2f}x"
               f" tokens/cycle)")
@@ -591,6 +803,8 @@ def main(argv=None):
     if args.prefix_gate and not report["prefix_compare"]["passed"]:
         raise SystemExit(1)
     if args.swap_gate and not report["oversub_compare"]["passed"]:
+        raise SystemExit(1)
+    if args.slo_gate and not report["slo_compare"]["passed"]:
         raise SystemExit(1)
     if args.fused_gate and failures:
         raise SystemExit(1)

@@ -84,13 +84,13 @@ def main():
         stops = {i: [p.output[min(7, len(p.output) - 1)]]
                  for i, p in zip(odd, probes)}
         sched.reset()
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.requests):
         sched.submit(np.asarray(prompts[i])[:args.prompt_len],
                      max_new=args.max_new,
                      stop_tokens=stops.get(i))
     done = sched.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     assert len(done) == args.requests, "every request must complete"
     for r in done:

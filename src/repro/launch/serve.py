@@ -46,6 +46,21 @@ lossless — the same trace with a big pool prints identical tokens:
       --variant 1 --scheduler --paged --swap --block-size 4 \\
       --num-blocks 12 --slots 2 --requests 6 --max-new 32
 
+``--ttft-deadline-ms`` / ``--itl-target-ms`` attach per-request SLOs
+(first token due within the deadline; max tolerated inter-token gap).
+Any declared SLO flips the scheduler into deadline-hit goodput mode:
+admission becomes earliest-feasible-deadline-first over the online
+measured cost model, the wide-cycle choice and the preemption victim
+policy weigh deadlines first, and ``--priority`` demotes to the tie
+break. ``--fifo`` keeps the legacy decision paths (deadlines are still
+tracked and the [slo] hit rate still prints). SLOs never change a
+request's tokens — only when they land:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \\
+      --variant 1 --scheduler --paged --swap --block-size 4 \\
+      --num-blocks 12 --slots 2 --requests 6 --max-new 32 \\
+      --ttft-deadline-ms 2000
+
 ``--prefix-cache`` (with ``--paged``) turns on prefix sharing: admission
 aliases cached prompt-prefix blocks into each row's block table instead
 of re-prefilling and re-storing them, and the run reports hit rate,
@@ -74,7 +89,7 @@ from repro.core.packing import Calibrator, format_params, params_nbytes
 from repro.core.speculative import speedup_model
 from repro.models import init_params, forward_train
 from repro.models.layers import Runtime
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import Engine, EngineConfig, validate_request_slos
 from repro.serving.scheduler import Scheduler
 
 
@@ -146,8 +161,24 @@ def run(argv=None):
     ap.add_argument("--stop-token", type=int, action="append", default=None,
                     help="per-request stop token id(s); applied to odd-"
                     "numbered requests (repeatable, scheduler mode)")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=None,
+                    help="per-request TTFT SLO: first token due within "
+                    "this many ms of arrival (applied to every request; "
+                    "flips the scheduler into deadline-hit goodput "
+                    "mode — EDF admission + deadline-protecting "
+                    "preemption over the online measured cost model)")
+    ap.add_argument("--itl-target-ms", type=float, default=None,
+                    help="per-request ITL SLO: max tolerated inter-token "
+                    "gap in ms (applied to every request)")
+    ap.add_argument("--fifo", action="store_true",
+                    help="disable SLO-aware goodput scheduling: keep the "
+                    "legacy priority-then-FIFO decision paths even when "
+                    "requests declare SLOs (deadlines still reported)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    # fail on malformed SLOs before paying for model init
+    validate_request_slos(ttft_deadline_ms=args.ttft_deadline_ms,
+                          itl_target_ms=args.itl_target_ms)
     if args.paged and not args.scheduler:
         ap.error("--paged requires --scheduler (the fixed-batch engine "
                  "has no block pool)")
@@ -212,8 +243,9 @@ def run(argv=None):
                           prefix_cache=args.prefix_cache,
                           prefix_cache_blocks=args.prefix_cache_blocks,
                           swap=args.swap,
-                          swap_store_blocks=args.swap_store_blocks)
-        t0 = time.time()
+                          swap_store_blocks=args.swap_store_blocks,
+                          slo_aware=not args.fifo)
+        t0 = time.perf_counter()
         for i in range(args.requests):
             # odd-numbered requests carry the per-request stop list; even
             # ones run to max_new (per-request conditions, not global EOS)
@@ -222,9 +254,11 @@ def run(argv=None):
             sched.submit(prompt["tokens"][i % b], max_new=args.max_new,
                          arrival=i / 4.0,
                          stop_tokens=args.stop_token if i % 2 else None,
-                         priority=prio)
+                         priority=prio,
+                         ttft_deadline_ms=args.ttft_deadline_ms,
+                         itl_target_ms=args.itl_target_ms)
         done = sched.run()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         s = sched.summary()
         mode = "fused" if sched.fused else "alternating"
         print(f"[sched:{mode}] {len(done)} reqs through {args.slots} "
@@ -235,10 +269,18 @@ def run(argv=None):
               f"mean latency={s.get('mean_latency_cycles', 0):.1f} cycles, "
               f"wall={dt:.1f}s")
         print(f"[latency] ttft p50/p95="
-              f"{s.get('ttft_cycles_p50', 0):.1f}/"
-              f"{s.get('ttft_cycles_p95', 0):.1f} cycles, "
-              f"itl p50/p95={s.get('itl_cycles_p50', 0):.1f}/"
-              f"{s.get('itl_cycles_p95', 0):.1f} cycles")
+              f"{s.get('ttft_cycles_p50') or 0:.1f}/"
+              f"{s.get('ttft_cycles_p95') or 0:.1f} cycles, "
+              f"itl p50/p95={s.get('itl_cycles_p50') or 0:.1f}/"
+              f"{s.get('itl_cycles_p95') or 0:.1f} cycles")
+        if s["slo_finished"]:
+            cm = s["cost_model"]
+            print(f"[slo] deadline hits {s['slo_hits']}/"
+                  f"{s['slo_finished']} "
+                  f"(rate={s['slo_hit_rate']:.2f}), cost model: "
+                  f"cycle_ms={cm['cycle_ms']:.2f} "
+                  f"(warm={cm['warm']}), mode="
+                  f"{'fifo' if args.fifo else 'slo-aware'}")
         if args.paged:
             print(f"[paged] pool={s['pool_blocks']} blocks x "
                   f"{s['block_size']} tok, high water="
@@ -268,11 +310,11 @@ def run(argv=None):
         return
 
     eng = Engine(cfg, params, cass=cass, ecfg=ecfg, rt_extra=rt_extra)
-    t0 = time.time()
+    t0 = time.perf_counter()
     tokens, stats = eng.generate(prompt, max_new=args.max_new,
                                  key=jax.random.fold_in(key, 2),
                                  speculative=args.variant != 0)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"[serve] {tokens.shape[0]} reqs, cycles={stats['cycles']}, "
           f"tokens/cycle={stats.get('tokens_per_cycle', 1.0):.2f}, "
           f"acceptance={stats['acceptance']}, wall={dt:.1f}s")

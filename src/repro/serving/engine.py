@@ -31,6 +31,7 @@ regression tests compare against.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
@@ -70,13 +71,20 @@ def validate_serving_knobs(cfg: ModelConfig, *, gamma: int, num_slots: int,
                            prefix_cache_blocks: int | None,
                            max_prefill_tokens_per_step: int | None,
                            swap: bool = False,
-                           swap_store_blocks: int | None = None) -> None:
+                           swap_store_blocks: int | None = None,
+                           ttft_deadline_ms: float | None = None,
+                           itl_target_ms: float | None = None) -> None:
     """Fail fast on inconsistent serving knobs.
 
     Every check here used to surface as a jit-time shape error, a silent
     perf inversion, or a mid-flight allocator assert; the scheduler (and
     ``launch.serve``) call this once at startup so misconfiguration reads
-    as a one-line ``ValueError`` instead."""
+    as a one-line ``ValueError`` instead. The SLO kwargs cover callers
+    that apply one default SLO to every request (``launch.serve``) —
+    per-request values go through ``validate_request_slos`` at
+    ``submit()`` time."""
+    validate_request_slos(ttft_deadline_ms=ttft_deadline_ms,
+                          itl_target_ms=itl_target_ms)
     if num_slots < 1:
         raise ValueError(f"num_slots must be >= 1 (got {num_slots})")
     if s_max < gamma + 2:
@@ -149,6 +157,26 @@ def validate_serving_knobs(cfg: ModelConfig, *, gamma: int, num_slots: int,
                     f"even one full row chain ({row_blocks} blocks at "
                     f"s_max={s_max}, block_size={block_size}) — no victim "
                     "would ever be eligible")
+
+
+def validate_request_slos(*, ttft_deadline_ms: float | None = None,
+                          itl_target_ms: float | None = None) -> None:
+    """Fail fast on malformed per-request SLOs (``Scheduler.submit``).
+
+    Each SLO is either None (unconstrained) or a strictly positive,
+    finite number of milliseconds — a zero or negative deadline is
+    unmeetable by construction and would silently class the request as
+    hopeless at admission, so it reads as a ValueError instead."""
+    for name, val in (("ttft_deadline_ms", ttft_deadline_ms),
+                      ("itl_target_ms", itl_target_ms)):
+        if val is None:
+            continue
+        if isinstance(val, bool) or not isinstance(val, (int, float)):
+            raise ValueError(f"{name} must be a number in ms or None "
+                             f"(got {val!r})")
+        if not math.isfinite(val) or val <= 0:
+            raise ValueError(f"{name} must be finite and > 0 ms "
+                             f"(got {val})")
 
 
 # ---------------------------------------------------------------------------

@@ -95,9 +95,11 @@ from repro.models.layers import Runtime
 from repro.serving import kvcache as KC
 from repro.serving.blockpool import (BlockAllocator, TRASH_BLOCK,
                                      blocks_needed)
+from repro.serving.costmodel import CostModel
 from repro.serving.engine import (EngineConfig, autoregressive_step,
                                   chunk_prefill_step, spec_decode_step,
-                                  unified_step, validate_serving_knobs)
+                                  unified_step, validate_request_slos,
+                                  validate_serving_knobs)
 from repro.serving.prefixcache import PrefixCache, PrefixMatch
 from repro.serving.swapstore import SpillStore
 
@@ -118,13 +120,21 @@ class Request:
     requests; FIFO within a priority — the all-default case is bitwise
     the pre-priority FIFO) and shields against preemption (lower
     priority preempted first). A preempted request carries its
-    ``swap_key`` into the host ``SpillStore`` until it resumes."""
+    ``swap_key`` into the host ``SpillStore`` until it resumes.
+
+    ``ttft_deadline_ms`` / ``itl_target_ms`` are per-request SLOs: once
+    any queued request declares one, the scheduler's three decision
+    points (admission order, wide-cycle choice, preemption victims)
+    switch to deadline-hit goodput and ``priority`` demotes to the tie
+    break. SLOs never change a request's tokens — only when they land."""
     rid: int
     tokens: np.ndarray                  # (L,) int prompt
     max_new: int
     arrival: float = 0.0                # scheduler-clock cycle of arrival
     stop_tokens: tuple = ()             # per-request stop ids (besides eos)
     priority: int = 0                   # higher = admitted first, kept last
+    ttft_deadline_ms: float | None = None   # first token due within (SLO)
+    itl_target_ms: float | None = None      # max inter-token gap (SLO)
     state: str = QUEUED
     slot: int = -1
     pos: int = 0                        # prompt tokens prefilled so far
@@ -153,6 +163,11 @@ class Request:
     def itl_cycles(self) -> np.ndarray:
         """Inter-token gaps in cycles (speculative bursts contribute 0s)."""
         return np.diff(np.asarray(self.token_cycles, np.float64))
+
+    @property
+    def has_slo(self) -> bool:
+        return (self.ttft_deadline_ms is not None
+                or self.itl_target_ms is not None)
 
 
 @dataclasses.dataclass
@@ -244,6 +259,7 @@ class Scheduler:
                  prefix_cache_blocks: int | None = None,
                  swap: bool = False,
                  swap_store_blocks: int | None = None,
+                 slo_aware: bool = True,
                  debug_invariants: int | None = None):
         if cfg.frontend:
             raise NotImplementedError(
@@ -279,6 +295,15 @@ class Scheduler:
         self.prefix_cache_blocks = prefix_cache_blocks
         self.swap = swap
         self.swap_store_blocks = swap_store_blocks
+        # SLO-aware goodput scheduling: on by default, but it only ever
+        # ACTIVATES once some queued request declares an SLO — the
+        # all-default run takes the legacy (pre-SLO) decision paths
+        # byte for byte (pinned by tests and the nightly gate)
+        self.slo_aware = slo_aware
+        # online measured cost model (tokens -> ms per compile bucket),
+        # fed one observation per device step by _stamp_wall; persists
+        # across reset() like the compiled steps it measures
+        self.cost = CostModel()
         # run the cross-registry check_invariants() every N steps
         # (0 = off). Defaults from REPRO_DEBUG_INVARIANTS so the test
         # suite turns it on globally (tests/conftest.py) without every
@@ -369,6 +394,7 @@ class Scheduler:
         self._next_rid = 0
         self._next_swap_key = 0
         self._steps_since_check = 0
+        self._slo_seen = False      # any request this run declared an SLO
         self.prefix: PrefixCache | None = None
         self._pending_cow: list[tuple[int, int]] = []
         if self.paged:
@@ -421,21 +447,43 @@ class Scheduler:
 
     # -- queue -------------------------------------------------------------
 
+    def _worst_case_tokens(self, n_prompt: int, max_new: int) -> int:
+        """Cache tokens a request can touch: prompt + outputs + the
+        decode horizon past the last committed token. A speculative
+        verify pass scatters γ+1 positions past the current length; the
+        autoregressive step writes exactly one — sizing AR requests at
+        the speculative bound would spuriously reject prompts that fit
+        (the width ``_remaining_cycles`` already gets right)."""
+        horizon = self.ecfg.gamma + 1 if self.speculative else 1
+        return n_prompt + max_new + horizon
+
     def submit(self, tokens, max_new: int, arrival: float = 0.0,
                rid: int | None = None,
-               stop_tokens=None, priority: int = 0) -> Request:
+               stop_tokens=None, priority: int = 0,
+               ttft_deadline_ms: float | None = None,
+               itl_target_ms: float | None = None) -> Request:
         """Queue one request. ``stop_tokens`` is an optional per-request
         list of token ids that end generation early (delivered inclusive,
         like EOS) — on top of the scheduler-global ``eos_id``.
         ``priority`` (default 0) orders admission among ready requests
         (higher first; FIFO within a priority, so all-default submission
         is bitwise the plain FIFO) and the preemption victim policy
-        (lower-priority rows are swapped out first)."""
+        (lower-priority rows are swapped out first).
+
+        ``ttft_deadline_ms`` (first token due within that many ms of
+        arrival) and ``itl_target_ms`` (max tolerated inter-token gap)
+        declare the request's SLOs. Submitting any SLO flips the
+        scheduler into goodput mode (``slo_aware``): admission becomes
+        earliest-deadline-first over the measured cost model, and
+        ``priority`` demotes to the tie break."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
-        need = len(tokens) + max_new + self.ecfg.gamma + 1
+        validate_request_slos(ttft_deadline_ms=ttft_deadline_ms,
+                              itl_target_ms=itl_target_ms)
+        need = self._worst_case_tokens(len(tokens), max_new)
         if need > self.capacity:
             raise ValueError(
-                f"request needs {len(tokens)}+{max_new}+γ+1 cache slots, "
+                f"request needs {need} cache slots (prompt {len(tokens)} "
+                f"+ max_new {max_new} + decode horizon), "
                 f"capacity={self.capacity}")
         if self.paged and blocks_needed(
                 need, self.block_size) > self.pool.capacity:
@@ -445,8 +493,12 @@ class Scheduler:
         req = Request(rid=self._next_rid if rid is None else rid,
                       tokens=tokens, max_new=max_new, arrival=arrival,
                       stop_tokens=tuple(stop_tokens or ()),
-                      priority=priority)
+                      priority=priority,
+                      ttft_deadline_ms=ttft_deadline_ms,
+                      itl_target_ms=itl_target_ms)
         self._next_rid = req.rid + 1
+        if req.has_slo:
+            self._slo_seen = True
         self.queue.append(req)
         return req
 
@@ -458,7 +510,7 @@ class Scheduler:
 
     def _request_blocks(self, req: Request) -> int:
         return blocks_needed(
-            len(req.tokens) + req.max_new + self.ecfg.gamma + 1,
+            self._worst_case_tokens(len(req.tokens), req.max_new),
             self.block_size)
 
     def _admission_plan(self, req: Request
@@ -525,7 +577,7 @@ class Scheduler:
                 jnp.asarray,
                 chain.slice_blocks(matched, chain.n_blocks,
                                    self.max_blocks))
-            t0 = time.time()
+            t0 = time.perf_counter()
             self.cache = self._restore(self.cache, jnp.asarray(vec), data)
             # the restore is async-dispatched; block on one output of
             # the executable so the stamped wall time covers the real
@@ -601,13 +653,79 @@ class Scheduler:
                 self.table[slot, :len(blocks)] = blocks
         self.stats["admitted"] += 1
 
+    # -- SLO goodput model ---------------------------------------------------
+
+    @property
+    def _slo_active(self) -> bool:
+        """Goodput mode engages only when enabled AND some request this
+        run declared an SLO — an all-default run never leaves the legacy
+        decision paths (they stay bitwise the pre-SLO scheduler)."""
+        return self.slo_aware and self._slo_seen
+
+    def _ttft_deadline_cycles(self, req: Request) -> float | None:
+        """Absolute cycle the first token is due (None = no deadline).
+        ms converts through the online cost model; cold start treats
+        ms as cycles (the nominal exchange rate)."""
+        if req.ttft_deadline_ms is None:
+            return None
+        return req.arrival + self.cost.ms_to_cycles(req.ttft_deadline_ms)
+
+    def _next_event_deadline_cycles(self, req: Request) -> float | None:
+        """Absolute cycle by which the request's NEXT delivered token
+        must land to keep its declared SLOs intact: the TTFT deadline
+        before the first token, the last commit plus the ITL target
+        after. None = this request's next token is unconstrained."""
+        if not req.token_cycles:
+            return self._ttft_deadline_cycles(req)
+        if req.itl_target_ms is None:
+            return None
+        return (req.token_cycles[-1]
+                + self.cost.ms_to_cycles(req.itl_target_ms))
+
+    def _admit_to_first_token_cycles(self, req: Request,
+                                     matched: int) -> int:
+        """Cycles from admitting ``req`` now to its first (or, resumed,
+        next) token: prefill of the unmatched prompt at the riding
+        width, plus the cycle that commits the token."""
+        width = self.ecfg.gamma + 1 if self.speculative else 1
+        unprefilled = max(len(req.tokens) - max(req.pos, matched), 0)
+        return -(-unprefilled // width) + 1
+
+    def _admission_key(self, idx: int, req: Request) -> tuple:
+        """EDF admission order: (feasibility class, deadline, -priority,
+        queue index). Class 0 = deadline still hittable if admitted this
+        cycle, earliest first; class 1 = no pending deadline; class 2 =
+        deadline already hopeless (served after everyone it could still
+        help — a lost deadline must not drag live ones down with it).
+        ``priority`` and FIFO order only break ties."""
+        dl = self._next_event_deadline_cycles(req)
+        if dl is None:
+            return (1, 0.0, -req.priority, idx)
+        feasible = (self.clock
+                    + self._admit_to_first_token_cycles(req, req.pos)
+                    <= dl)
+        return (0 if feasible else 2, dl, -req.priority, idx)
+
     def _next_ready_index(self) -> int | None:
-        """Queue index of the next request to admit: the highest
-        ``priority`` among *ready* requests (arrival <= clock), FIFO
-        within a priority — with all-default priorities this is exactly
-        the first ready request, the pre-priority FIFO behavior. A
-        future arrival queued ahead never head-of-line-blocks one that
-        is already due."""
+        """Queue index of the next request to admit. Legacy (no SLOs
+        anywhere): the highest ``priority`` among *ready* requests
+        (arrival <= clock), FIFO within a priority — with all-default
+        priorities this is exactly the first ready request, the
+        pre-priority FIFO behavior. A future arrival queued ahead never
+        head-of-line-blocks one that is already due.
+
+        Goodput mode (``_slo_active``): earliest-feasible-deadline-first
+        over the measured cost model (``_admission_key``), with
+        ``priority`` demoted to the tie break."""
+        if self._slo_active:
+            best, best_key = None, None
+            for i, r in enumerate(self.queue):
+                if r.arrival > self.clock:
+                    continue
+                key = self._admission_key(i, r)
+                if best is None or key < best_key:
+                    best, best_key = i, key
+            return best
         best, best_p = None, None
         for i, r in enumerate(self.queue):
             if r.arrival > self.clock:
@@ -633,9 +751,21 @@ class Scheduler:
         admitted now): prefill of the unmatched prompt at the riding
         width, plus the cycle that commits the first token, plus the
         swap round-trip margin a preemption spends to make room."""
-        width = self.ecfg.gamma + 1 if self.speculative else 1
-        unprefilled = max(len(head.tokens) - max(head.pos, matched), 0)
-        return -(-unprefilled // width) + 1 + SWAP_MARGIN_CYCLES
+        return (self._admit_to_first_token_cycles(head, matched)
+                + SWAP_MARGIN_CYCLES)
+
+    def _victim_slo_at_risk(self, req: Request) -> bool:
+        """Would preempting this resident row sacrifice an SLO it can
+        still hit? True when its next-token deadline is live and still
+        reachable if the row stays resident (a prefilling row delivers
+        after its remaining chunks; a decode row commits next cycle).
+        Rows with no pending deadline — or an already-hopeless one —
+        are fair game: swapping them out costs zero goodput."""
+        dl = self._next_event_deadline_cycles(req)
+        if dl is None:
+            return False
+        return self.clock + self._admit_to_first_token_cycles(
+            req, req.pos) <= dl
 
     def _preempt(self, victim: Request) -> None:
         """Swap ``victim`` out: flush any copy-on-write it is owed, spill
@@ -656,7 +786,7 @@ class Scheduler:
         # and trip its swapped-key invariants
         key = ("swap", self._next_swap_key)
         self._next_swap_key += 1
-        t0 = time.time()
+        t0 = time.perf_counter()
         data = self._spill(self.cache, jnp.asarray(vec))
         self.spill.put(key, data, n_res, length=int(self.lengths[slot]),
                        pos=victim.pos, cur=int(self.cur[slot, 0]))
@@ -689,12 +819,24 @@ class Scheduler:
         most remaining work within a priority. Anti-thrash: an
         equal-priority victim additionally needs MORE remaining work
         than the head's total (shortest-remaining-first), so two long
-        rows can never preempt each other in a loop. Returns the head's
-        refreshed plan once it fits the pool, else None (no eligible
-        victim, or everything eligible still wasn't enough — any rows
-        already preempted stay out and resume on their own merit)."""
+        rows can never preempt each other in a loop.
+
+        Goodput mode (``_slo_active``) maximises deadline hits instead:
+        rows whose live SLO is still winnable are never sacrificed
+        (``_victim_slo_at_risk``), SLO-free rows go out before
+        blown-SLO rows, and ``priority`` demotes to the tie break. A
+        deadline-free head keeps the full legacy bar (priority shield +
+        SRPT) — it has no deadline to justify hurting anyone for.
+
+        Returns the head's refreshed plan once it fits the pool, else
+        None (no eligible victim, or everything eligible still wasn't
+        enough — any rows already preempted stay out and resume on
+        their own merit)."""
         head_cost = self._head_admit_cycles(head, matched)
         head_rem = self._remaining_cycles(head)
+        slo_mode = self._slo_active
+        head_dl = (self._next_event_deadline_cycles(head)
+                   if slo_mode else None)
         cands = []
         for r in self.slots:
             if r is None:
@@ -702,12 +844,25 @@ class Scheduler:
             rem = self._remaining_cycles(r)
             if rem <= head_cost:
                 continue                    # not worth the head's wait
+            if slo_mode:
+                if self._victim_slo_at_risk(r):
+                    continue                # never sacrifice a live SLO
+                if head_dl is None:
+                    # deadline-free head: keep the legacy gain bar
+                    if r.priority > head.priority:
+                        continue            # never preempt upward
+                    if r.priority == head.priority and rem <= head_rem:
+                        continue            # anti-thrash: SRPT order
+                cands.append(((1 if r.has_slo else 0), r.priority,
+                              -rem, r.slot, r))
+                continue
             if r.priority > head.priority:
                 continue                    # never preempt upward
             if r.priority == head.priority and rem <= head_rem:
                 continue                    # anti-thrash: SRPT order
             cands.append((r.priority, -rem, r.slot, r))
-        for _, _, _, victim in sorted(cands, key=lambda c: c[:3]):
+        for cand in sorted(cands, key=lambda c: c[:-1]):
+            victim = cand[-1]
             n_res = blocks_needed(int(self.lengths[victim.slot]),
                                   self.block_size)
             if not self.spill.can_hold(n_res):
@@ -797,18 +952,22 @@ class Scheduler:
 
     def _stamp_wall(self, name: str, t0: float) -> None:
         """Fold one device-step invocation's wall time into the per-bucket
-        stats (``trace_counts``-style, keyed by the same step names).
-        These measured per-bucket times seed the cost-model refresh: the
-        planner's token-cost comparisons (``_plan_wide_cycle``, the
-        preemption policy) trade in cycle units, and ``summary()`` makes
-        the actual per-bucket wall costs observable next to them."""
+        stats (``trace_counts``-style, keyed by the same step names) and
+        the online cost model — the per-bucket fit refreshes as cycles
+        retire. Intervals are taken off ``time.perf_counter()`` (the
+        monotonic clock): an NTP step across ``time.time()`` would make
+        ``bucket_wall_ms`` negative and poison the cost model."""
+        dt = time.perf_counter() - t0
         w = self.step_walls.setdefault(name, [0, 0.0])
         w[0] += 1
-        w[1] += time.time() - t0
+        w[1] += dt
+        self.cost.observe(name, dt * 1e3)
 
     def _record_tokens(self, req: Request, k: int) -> None:
-        """Stamp ``k`` just-committed tokens with this cycle's end time."""
-        now = time.time()
+        """Stamp ``k`` just-committed tokens with this cycle's end time.
+        perf_counter, not epoch time: the stamps are only ever diffed
+        into inter-token gaps, which must stay non-negative."""
+        now = time.perf_counter()
         req.token_cycles.extend([self.clock + 1.0] * k)
         req.token_walls.extend([now] * k)
 
@@ -927,7 +1086,7 @@ class Scheduler:
             if self.paged:
                 self._grow_blocks(r, r.pos + v)
         self._push_host_state()
-        t0 = time.time()
+        t0 = time.perf_counter()
         last, self.cache = self._chunk(self.params, self.cache,
                                        jnp.asarray(tokens),
                                        jnp.asarray(valid))
@@ -1000,7 +1159,15 @@ class Scheduler:
         (``n_decode`` row-cycles). Stall only when riding is strictly
         dearer — short prompts ride (no admission stall, flat inter-token
         latency), long prompts against few decode rows take the stall the
-        alternating scheduler would have paid anyway."""
+        alternating scheduler would have paid anyway.
+
+        Goodput mode (``_slo_active``): deadlines vote first. A
+        prefilling row whose TTFT deadline the wide bucket meets but
+        riding blows votes to stall; a decode row whose ITL target one
+        stall cycle blows votes to ride. Majority wins; on a tie the
+        token-cost comparison re-runs in MEASURED milliseconds (the
+        online cost model's per-bucket means — at the cold-start nominal
+        rate it reduces to exactly the legacy cycle-count comparison)."""
         if not plan.decoding:
             return True
         if not plan.prefilling:
@@ -1010,7 +1177,29 @@ class Scheduler:
             -(-(len(r.tokens) - r.pos) // w)
             - -(-(len(r.tokens) - r.pos) // c)
             for r in plan.prefilling)
-        return ride_extra > len(plan.decoding)
+        if not self._slo_active:
+            return ride_extra > len(plan.decoding)
+        stall_votes = ride_votes = 0
+        for r in plan.prefilling:
+            dl = self._next_event_deadline_cycles(r)
+            if dl is None:
+                continue
+            rem = len(r.tokens) - r.pos
+            wide_first = self.clock + -(-rem // c) + 1
+            ride_first = self.clock + -(-rem // w) + 1
+            if wide_first <= dl < ride_first:
+                stall_votes += 1            # the wide bucket saves its TTFT
+        for r in plan.decoding:
+            dl = self._next_event_deadline_cycles(r)
+            if dl is None:
+                continue
+            if self.clock + 1 <= dl < self.clock + 2:
+                ride_votes += 1             # one stall cycle blows its ITL
+        if stall_votes != ride_votes:
+            return stall_votes > ride_votes
+        ride_ms = ride_extra * self.cost.bucket_ms("unified")
+        stall_ms = len(plan.decoding) * self.cost.bucket_ms("chunk")
+        return ride_ms > stall_ms
 
     def _fused_step(self) -> bool:
         """Execute one planned mixed-role cycle via ``unified_step``."""
@@ -1037,7 +1226,7 @@ class Scheduler:
                                   + self.ecfg.gamma + 1)
         self._push_host_state()
         self.key, sub = jax.random.split(self.key)
-        t0 = time.time()
+        t0 = time.perf_counter()
         res, last, self.cache = self._unified(
             self.params, self.cache, jnp.asarray(self.cur),
             jnp.asarray(plan.chunk_tokens), jnp.asarray(plan.prefill_valid),
@@ -1132,7 +1321,7 @@ class Scheduler:
         self.key, sub = jax.random.split(self.key)
         cur = jnp.asarray(self.cur)
         act = jnp.asarray(active)
-        t0 = time.time()
+        t0 = time.perf_counter()
         if self.speculative:
             res, self.cache = self._spec(self.params, self.cache, cur,
                                          sub, act)
@@ -1176,7 +1365,12 @@ class Scheduler:
         speculative burst delivers its run in one cycle/commit, so
         in-burst gaps are 0; stall cycles (alternating-mode admissions)
         surface as gaps ≥ 2 cycles. TTFT has no wall counterpart —
-        arrivals are virtual cycle timestamps, not wall times."""
+        arrivals are virtual cycle timestamps, not wall times.
+
+        Every key is always present; a percentile whose sample list is
+        empty (nothing finished, or single-token outputs with no gaps)
+        reports ``None`` rather than raising — callers that format the
+        numbers should treat ``None`` as "no data"."""
         ttft = [r.ttft_cycles for r in self.finished
                 if r.ttft_cycles is not None]
         gaps = np.concatenate(
@@ -1184,7 +1378,10 @@ class Scheduler:
         wall_gaps = np.concatenate(
             [np.diff(np.asarray(r.token_walls, np.float64))
              for r in self.finished] or [np.zeros(0)])
-        out: dict = {}
+        out: dict = {k: None for k in (
+            "ttft_cycles_mean", "ttft_cycles_p50", "ttft_cycles_p95",
+            "itl_cycles_mean", "itl_cycles_p50", "itl_cycles_p95",
+            "itl_ms_p50", "itl_ms_p95")}
         if ttft:
             out["ttft_cycles_mean"] = float(np.mean(ttft))
             out["ttft_cycles_p50"] = float(np.percentile(ttft, 50))
@@ -1198,6 +1395,29 @@ class Scheduler:
             out["itl_ms_p95"] = float(np.percentile(wall_gaps, 95) * 1e3)
         return out
 
+    def _request_slo_hit(self, req: Request) -> bool:
+        """Did a finished request meet every SLO it declared? Judged in
+        cycle space through the cost model's exchange rate — the same
+        units the planner's decisions were made in."""
+        dl = self._ttft_deadline_cycles(req)
+        if dl is not None:
+            if req.ttft_cycles is None:
+                return False
+            if req.arrival + req.ttft_cycles > dl:
+                return False
+        if req.itl_target_ms is not None and len(req.token_cycles) > 1:
+            tgt = self.cost.ms_to_cycles(req.itl_target_ms)
+            if float(req.itl_cycles.max()) > tgt:
+                return False
+        return True
+
+    def goodput_summary(self) -> dict:
+        """Deadline-hit goodput over finished SLO-carrying requests."""
+        slo = [r for r in self.finished if r.has_slo]
+        hits = sum(self._request_slo_hit(r) for r in slo)
+        return {"slo_finished": len(slo), "slo_hits": hits,
+                "slo_hit_rate": hits / len(slo) if slo else None}
+
     def summary(self) -> dict:
         s = dict(self.stats)
         s["tokens_per_cycle"] = s["committed"] / max(s["cycles"], 1)
@@ -1206,7 +1426,8 @@ class Scheduler:
         if self.finished:
             lat = [r.finished_at - r.arrival for r in self.finished]
             s["mean_latency_cycles"] = float(np.mean(lat))
-            s.update(self.latency_summary())
+        s.update(self.latency_summary())
+        s.update(self.goodput_summary())
         if self.paged:
             s["pool_blocks"] = self.pool.capacity
             s["pool_high_water_blocks"] = self.pool.high_water
@@ -1228,4 +1449,8 @@ class Scheduler:
             name: {"calls": calls, "total_ms": total * 1e3,
                    "mean_ms": total * 1e3 / max(calls, 1)}
             for name, (calls, total) in sorted(self.step_walls.items())}
+        # the online cost model the SLO planner trades in (persists
+        # across reset, unlike step_walls): per-bucket measured means
+        # plus the cycle<->ms exchange rate
+        s["cost_model"] = self.cost.snapshot()
         return s

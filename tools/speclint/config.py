@@ -63,7 +63,10 @@ class Config:
     """Knobs shared by every pass."""
     # Scheduler/Engine attributes that hold jit-compiled entry points:
     # a call through one of these produces traced values and is a
-    # recompile-hazard site.
+    # recompile-hazard site. (The PR 7 SLO cost model adds NO entry
+    # here on purpose: serving/costmodel.py is host-side arithmetic
+    # over already-stamped walls — deadline math must never touch a
+    # traced value.)
     jit_entry_attrs: frozenset = frozenset({
         "_spec", "_auto", "_chunk", "_unified", "_cow", "_spill",
         "_restore", "_prefill", "_scatter"})
