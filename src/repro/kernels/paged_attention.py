@@ -1,0 +1,673 @@
+"""Pallas paged-attention decode kernel with in-kernel Cassandra decode.
+
+The serving hot path today assembles each request's KV prefix with
+``kvcache.gather_block_leaf`` (an XLA gather that materialises a dense
+``(B, MB*BS, ...)`` copy of the pool in HBM) before attention starts.
+For the packed draft store it *also* materialises the Cassandra-decoded
+bf16 KV densely — forfeiting exactly the bandwidth win the paper's
+DRAM→L2 decoder module exists to capture.
+
+This module walks the ``(B, MB)`` block table *in-kernel* instead: the
+grid iterates (row, kv-block), each step streams one ``(BS, ...)`` pool
+block HBM→VMEM via a scalar-prefetched table index map and folds it into
+an online-softmax (flash) accumulator under the row's ``length`` mask.
+The dense per-request prefix never exists.
+
+Two variants behind one family of entry points:
+
+* **plain** — bf16 pool blocks (verify pass, and any materialised view).
+  ``paged_gqa`` / ``paged_mla``.
+* **packed** — the pool blocks are the Cassandra C-1 spec leaves
+  (bitmap / signmant / exp words / mode / emax); the rank-codebook
+  reconstruction (``unary_decode``-style compare-sum ranks + 3-bit delta
+  exponents, ``draft_matmul._decode_tile``-style unpacking) runs inside
+  the kernel between the VMEM load and the QK dot. Draft-pass KV never
+  exists densely in HBM. ``paged_gqa_packed``. (MLA caches cannot be
+  packed repo-wide — ``qk_rope_dim=16`` fails the 32-lane pack — so the
+  packed variant is GQA-only.)
+
+Each entry point takes ``impl`` ∈ {"jnp", "interpret", "pallas"}:
+``jnp`` is the gather-then-scan reference built from the *same* per-block
+step helpers (this is both the CPU serving path and the parity oracle);
+``interpret`` runs the Pallas kernel in interpreter mode (CPU CI);
+``pallas`` compiles for the accelerator. The contract is bitwise:
+``interpret``/``pallas`` must equal ``jnp`` at the (acc, m, l) level.
+
+The kernels return *unnormalised* flash state ``(acc, m, l)`` so the
+caller can merge the scratch/new-token suffix (which lives outside the
+pool) with one more flash step — see ``merge_gqa_suffix`` /
+``merge_mla_suffix`` — before the final ``acc / l`` division.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+# Unused table slots point at block 0 by convention (the trash block,
+# same contract as serving.kvcache.TRASH_BLOCK / append_paged_batched).
+# Kept as a local constant so kernels/ does not import serving/.
+TRASH_BLOCK = 0
+
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None))
+
+
+def sanitize_table(table: jax.Array, num_blocks: int) -> jax.Array:
+    """Route out-of-range table entries through the trash block.
+
+    The gather path and the kernel path must agree on what a garbage
+    table slot reads: block 0 (whose contents are masked by ``length``
+    anyway). ``jnp.take(..., mode="clip")`` alone would silently alias
+    out-of-range entries to the *last* pool block.
+    """
+    ok = (table >= 0) & (table < num_blocks)
+    return jnp.where(ok, table, TRASH_BLOCK).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Cassandra C-1 spec decode (bit-exact replica of the kvcache.read_store
+# draft view: coding.decode_exponents + format._join_kept_draft +
+# pruning.desparsify), written in the 2-D unrolled style Pallas lowers.
+# ---------------------------------------------------------------------------
+
+
+def _unpack_bits32(words: jax.Array, n: int) -> jax.Array:
+    """(R, W) uint32 words -> (R, n) int32 bits, little-endian."""
+    r, w = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(r, w * 32)[:, :n].astype(jnp.int32)
+
+
+def _unpack_codes32(words: jax.Array, width: int, k: int) -> jax.Array:
+    """(R, W) uint32 words -> (R, k) int32 codes of ``width`` bits."""
+    bits = _unpack_bits32(words, k * width).reshape(words.shape[0], k, width)
+    shifts = jnp.arange(width, dtype=jnp.int32)
+    return jnp.sum(bits << shifts[None, None, :], axis=-1)
+
+
+def _unary_ranks(bits: jax.Array, keep: int, pchunk: int = 128) -> jax.Array:
+    """Compare-sum unary rank decode (kernels/unary_decode.py Alg. 1).
+
+    ``bits`` is the (R, n) 0/1 stream; returns (R, keep) int32 ranks in
+    [0, 31]. VMEM-bounded: the position search runs in ``pchunk``-wide
+    column chunks instead of one (R, keep, n) broadcast.
+    """
+    r, n = bits.shape
+    idx = jnp.cumsum(bits, axis=-1)           # ones seen through col p
+    # NB: arange(0, n) + 1, not arange(1, n+1) — the latter materialises
+    # eagerly and Pallas rejects kernels that close over array constants.
+    ks = jnp.arange(keep, dtype=jnp.int32) + 1
+    pos = jnp.zeros((r, keep), dtype=jnp.int32)
+    for p0 in range(0, n, pchunk):
+        chunk = idx[:, p0:p0 + pchunk]
+        # pos[j] = #{p : idx[p] < j+1} = 0-indexed position of the
+        # (j+1)-th set bit (strict compare — <= lands on the next bit)
+        pos = pos + jnp.sum(
+            (chunk[:, None, :] < ks[None, :, None]).astype(jnp.int32),
+            axis=-1)
+    prev = jnp.concatenate(
+        [jnp.full((r, 1), -1, dtype=jnp.int32), pos[:, :-1]], axis=-1)
+    return jnp.clip(pos - prev - 1, 0, 31)
+
+
+def _decode_kv_rows(bitmap: jax.Array, signmant: jax.Array,
+                    exp_words: jax.Array, mode: jax.Array, emax: jax.Array,
+                    book32: jax.Array, *, d: int, keep: int, trunc: int,
+                    exp_bits: int) -> jax.Array:
+    """Decode (R,) Cassandra C-1 spec rows -> (R, d) bf16.
+
+    Bit-exact vs the host draft view (``read_store`` with
+    ``view="draft"``): unary/delta exponent reconstruction without the
+    verif correction, truncated mantissas, desparsified against the
+    bitmap. ``book32`` is ``exp_of_rank[:32]`` as int32.
+    """
+    r = bitmap.shape[0]
+    t_keep = 7 - trunc
+    width = 1 + t_keep
+    esc = (1 << exp_bits) - 1
+
+    code = _unpack_codes32(signmant, width, keep)       # (R, keep)
+    sign = (code >> t_keep) & 1
+    mant = (code & ((1 << t_keep) - 1)) << trunc
+
+    # exponents: unary ranks through the codebook, or 3-bit deltas. The
+    # unary stream may run into the region's word-padding past
+    # keep*exp_bits bits (encode_exponents sizes the region in whole
+    # uint32 words), so rank-decode over the FULL region width.
+    ebits = _unpack_bits32(exp_words, exp_words.shape[1] * 32)
+    uranks = _unary_ranks(ebits, keep)                   # (R, keep)
+    uexp = jnp.zeros((r, keep), dtype=jnp.int32)
+    for rk in range(32):
+        uexp = uexp + jnp.where(uranks == rk, book32[rk], 0)
+
+    dcodes = jnp.sum(
+        ebits[:, :keep * exp_bits].reshape(r, keep, exp_bits)
+        << jnp.arange(exp_bits, dtype=jnp.int32)[None, None, :],
+        axis=-1)
+    dexp = jnp.clip(emax[:, None] - dcodes, 0, 255)
+    dexp = jnp.where(dcodes == esc, 0, dexp)
+
+    exp = jnp.where((mode == 0)[:, None], uexp, dexp)
+
+    kept16 = ((sign << 15) | (exp << 7) | mant).astype(jnp.int32)
+
+    # desparsify against the bitmap
+    bbits = _unpack_bits32(bitmap, d)                    # (R, d)
+    rank = jnp.cumsum(bbits, axis=-1) - 1
+    gidx = jnp.clip(rank, 0, keep - 1)
+    dense16 = jnp.take_along_axis(kept16, gidx, axis=-1)
+    dense16 = jnp.where(bbits == 1, dense16, 0).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(dense16, jnp.bfloat16)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d", "keep", "trunc", "exp_bits"))
+def decode_spec_pool(spec: dict, book: jax.Array, *, d: int, keep: int,
+                     trunc: int, exp_bits: int) -> jax.Array:
+    """Decode a whole packed pool: spec leaves (NB, BS, Hkv, 1, W) ->
+    bf16 (NB, BS, Hkv, d).
+
+    This is the same ``_decode_kv_rows`` the packed kernel runs per
+    block — exposed so tests and the kernel-bench gate can assert the
+    in-kernel Cassandra decode is bit-exact against the host draft view
+    (``kvcache.read_store`` with ``view="draft"``) without going through
+    flash state, whose float association order is compile-dependent.
+    """
+    nb, bs, hkv = spec["bitmap"].shape[:3]
+    rows = nb * bs * hkv
+    out = _decode_kv_rows(
+        spec["bitmap"].reshape(rows, -1),
+        spec["signmant"].reshape(rows, -1),
+        spec["exp_words"].reshape(rows, -1),
+        spec["exp_mode"].reshape(rows).astype(jnp.int32),
+        spec["exp_emax"].reshape(rows).astype(jnp.int32),
+        book[:32].astype(jnp.int32),
+        d=d, keep=keep, trunc=trunc, exp_bits=exp_bits)
+    return out.reshape(nb, bs, hkv, d)
+
+
+# ---------------------------------------------------------------------------
+# Shared per-block flash step helpers. The Pallas kernel bodies and the
+# jnp gather reference call the *same* functions on identically-shaped
+# operands, which is what makes the parity contract bitwise.
+# ---------------------------------------------------------------------------
+
+
+def _gqa_block(q: jax.Array, kb: jax.Array, vb: jax.Array,
+               valid: jax.Array, m: jax.Array, l: jax.Array,
+               acc: jax.Array, *, scale: float):
+    """One flash step over a (S, Hkv, D) KV block.
+
+    q: (T, Hkv, G, D) f32 · kb/vb: (S, Hkv, Dk)/(S, Hkv, Dv) ·
+    valid: (S,) bool · m/l: (Hkv, G, T) f32 · acc: (Hkv, G, T, Dv) f32.
+    Invalid rows are zeroed on the *value* operand too: a masked packed
+    lane can decode to NaN and 0·NaN would poison the accumulator.
+    """
+    vb = jnp.where(valid[:, None, None], vb, 0).astype(vb.dtype)
+    s = jnp.einsum("thgd,shd->hgts", q, kb.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.where(valid[None, None, None, :],
+                  jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "hgts,shd->hgtd", p, vb.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def _mla_block(q_eff: jax.Array, q_rope: jax.Array, cb: jax.Array,
+               krb: jax.Array, valid: jax.Array, m: jax.Array,
+               l: jax.Array, acc: jax.Array, *, scale: float):
+    """One flash step in latent space over a (S, L)+(S, R) block.
+
+    q_eff: (T, H, L) f32 (q_nope absorbed through w_uk) · q_rope:
+    (T, H, R) f32 · cb: (S, L) · krb: (S, R) · m/l: (H, T) f32 ·
+    acc: (H, T, L) f32. The latent block ``cb`` is both the score and
+    the value operand (absorbed MLA math), so one zeroed copy serves
+    both and keeps masked-lane NaNs out of the accumulator.
+    """
+    cz = jnp.where(valid[:, None], cb, 0).astype(jnp.float32)
+    krz = jnp.where(valid[:, None], krb, 0).astype(jnp.float32)
+    s = (jnp.einsum("thl,sl->hts", q_eff, cz)
+         + jnp.einsum("thr,sr->hts", q_rope, krz)) * scale
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.where(valid[None, None, :],
+                  jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum("hts,sl->htl", p, cz)
+    return m_new, l_new, acc_new
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel bodies. Grid = (B rows, MB table columns); the pool
+# operands use scalar-prefetched index maps so grid step (b, j) streams
+# pool block table[b, j] HBM->VMEM. Outputs are revisited across j with
+# @pl.when(j == 0) init — flash state accumulates in program order.
+# ---------------------------------------------------------------------------
+
+
+def _gqa_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
+                acc_ref, m_ref, l_ref, *, scale: float, block_size: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[0] = jnp.full(m_ref.shape[1:], NEG_INF, dtype=jnp.float32)
+        l_ref[0] = jnp.zeros(l_ref.shape[1:], dtype=jnp.float32)
+        acc_ref[0] = jnp.zeros(acc_ref.shape[1:], dtype=jnp.float32)
+
+    valid = j * block_size + jnp.arange(block_size) < len_ref[b]
+    m, l, acc = _gqa_block(
+        q_ref[0].astype(jnp.float32), k_ref[0], v_ref[0], valid,
+        m_ref[0], l_ref[0], acc_ref[0], scale=scale)
+    m_ref[0], l_ref[0], acc_ref[0] = m, l, acc
+
+
+def _gqa_packed_kernel(tbl_ref, len_ref, q_ref,
+                       kbm_ref, ksm_ref, kew_ref, kmo_ref, kem_ref,
+                       vbm_ref, vsm_ref, vew_ref, vmo_ref, vem_ref,
+                       book_ref,
+                       acc_ref, m_ref, l_ref, *, scale: float,
+                       block_size: int, hkv: int, d: int, keep: int,
+                       trunc: int, exp_bits: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[0] = jnp.full(m_ref.shape[1:], NEG_INF, dtype=jnp.float32)
+        l_ref[0] = jnp.zeros(l_ref.shape[1:], dtype=jnp.float32)
+        acc_ref[0] = jnp.zeros(acc_ref.shape[1:], dtype=jnp.float32)
+
+    book32 = book_ref[...].astype(jnp.int32)
+    kb = _decode_kv_rows(
+        kbm_ref[0], ksm_ref[0], kew_ref[0], kmo_ref[0], kem_ref[0],
+        book32, d=d, keep=keep, trunc=trunc, exp_bits=exp_bits)
+    vb = _decode_kv_rows(
+        vbm_ref[0], vsm_ref[0], vew_ref[0], vmo_ref[0], vem_ref[0],
+        book32, d=d, keep=keep, trunc=trunc, exp_bits=exp_bits)
+    kb = kb.reshape(block_size, hkv, d)
+    vb = vb.reshape(block_size, hkv, d)
+
+    valid = j * block_size + jnp.arange(block_size) < len_ref[b]
+    m, l, acc = _gqa_block(
+        q_ref[0].astype(jnp.float32), kb, vb, valid,
+        m_ref[0], l_ref[0], acc_ref[0], scale=scale)
+    m_ref[0], l_ref[0], acc_ref[0] = m, l, acc
+
+
+def _mla_kernel(tbl_ref, len_ref, qe_ref, qr_ref, c_ref, kr_ref,
+                acc_ref, m_ref, l_ref, *, scale: float, block_size: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[0] = jnp.full(m_ref.shape[1:], NEG_INF, dtype=jnp.float32)
+        l_ref[0] = jnp.zeros(l_ref.shape[1:], dtype=jnp.float32)
+        acc_ref[0] = jnp.zeros(acc_ref.shape[1:], dtype=jnp.float32)
+
+    valid = j * block_size + jnp.arange(block_size) < len_ref[b]
+    m, l, acc = _mla_block(
+        qe_ref[0].astype(jnp.float32), qr_ref[0].astype(jnp.float32),
+        c_ref[0], kr_ref[0], valid,
+        m_ref[0], l_ref[0], acc_ref[0], scale=scale)
+    m_ref[0], l_ref[0], acc_ref[0] = m, l, acc
+
+
+# ---------------------------------------------------------------------------
+# Public entry points. The "jnp" impl of each is the sanitised-gather +
+# lax.scan reference built from the same step helpers — both the CPU
+# serving path and the parity oracle for the Pallas kernels.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def paged_gqa(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+              table: jax.Array, length: jax.Array, *, scale: float,
+              impl: str = "jnp"):
+    """Paged GQA decode attention over plain bf16 pool blocks.
+
+    q: (B, T, Hkv, G, D) · k_pool/v_pool: (NB, BS, Hkv, Dk/Dv) ·
+    table: (B, MB) int32 · length: (B,) int32 prefix lengths.
+    Returns unnormalised flash state (acc (B, Hkv, G, T, Dv) f32,
+    m (B, Hkv, G, T) f32, l (B, Hkv, G, T) f32).
+    """
+    b, t, hkv, g, dq = q.shape
+    nb, bs, _, dk = k_pool.shape
+    dv = v_pool.shape[-1]
+    mb = table.shape[1]
+    table = sanitize_table(table, nb)
+    length = length.astype(jnp.int32)
+    qf = q.astype(jnp.float32)
+
+    if impl == "jnp":
+        def row(qr, tbl_row, ln):
+            def body(carry, j):
+                m, l, acc = carry
+                kb = k_pool[tbl_row[j]]
+                vb = v_pool[tbl_row[j]]
+                valid = j * bs + jnp.arange(bs) < ln
+                m, l, acc = _gqa_block(qr, kb, vb, valid, m, l, acc,
+                                       scale=scale)
+                return (m, l, acc), None
+
+            init = (jnp.full((hkv, g, t), NEG_INF, jnp.float32),
+                    jnp.zeros((hkv, g, t), jnp.float32),
+                    jnp.zeros((hkv, g, t, dv), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(
+                body, init, jnp.arange(mb, dtype=jnp.int32))
+            return acc, m, l
+
+        return jax.vmap(row)(qf, table, length)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mb),
+        in_specs=[
+            pl.BlockSpec((1, t, hkv, g, dq),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, dk),
+                         lambda bi, j, tbl, ln: (tbl[bi, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, dv),
+                         lambda bi, j, tbl, ln: (tbl[bi, j], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hkv, g, t, dv),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, g, t),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, g, t),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0)),
+        ],
+    )
+    kwargs: dict[str, Any] = {}
+    if impl == "interpret":
+        kwargs["interpret"] = True
+    elif _CompilerParams is not None:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    acc, m, l = pl.pallas_call(
+        functools.partial(_gqa_kernel, scale=scale, block_size=bs),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, t, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, t), jnp.float32),
+        ],
+        **kwargs,
+    )(table, length, qf, k_pool, v_pool)
+    return acc, m, l
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "d", "keep", "trunc", "exp_bits", "scale", "impl"))
+def paged_gqa_packed(q: jax.Array, k_spec: dict, v_spec: dict,
+                     table: jax.Array, length: jax.Array,
+                     book: jax.Array, *, d: int, keep: int, trunc: int,
+                     exp_bits: int, scale: float, impl: str = "jnp"):
+    """Paged GQA decode attention over *packed* Cassandra spec blocks.
+
+    ``k_spec``/``v_spec`` are the store's spec leaf dicts with layout
+    (NB, BS, Hkv, 1, W) for the word planes and (NB, BS, Hkv, 1) for
+    mode/emax. The Cassandra draft-view decode runs between the VMEM
+    load and the QK dot — the bf16 KV never exists densely in HBM.
+    ``book`` is the layer's exp_of_rank codebook (>=32 entries).
+    Returns unnormalised flash state like ``paged_gqa``.
+    """
+    b, t, hkv, g, dq = q.shape
+    nb, bs = k_spec["bitmap"].shape[:2]
+    mb = table.shape[1]
+    rows = bs * hkv
+    table = sanitize_table(table, nb)
+    length = length.astype(jnp.int32)
+    qf = q.astype(jnp.float32)
+    book32 = book[:32].astype(jnp.int32)
+
+    def flat(spec):
+        # (NB, BS, Hkv, 1, W) word planes -> (NB, R, W); mode/emax -> (NB, R)
+        return (
+            spec["bitmap"].reshape(nb, rows, -1),
+            spec["signmant"].reshape(nb, rows, -1),
+            spec["exp_words"].reshape(nb, rows, -1),
+            spec["exp_mode"].reshape(nb, rows).astype(jnp.int32),
+            spec["exp_emax"].reshape(nb, rows).astype(jnp.int32),
+        )
+
+    kf, vf = flat(k_spec), flat(v_spec)
+
+    def decode_block(leaves, idx):
+        bm, sm, ew, mo, em = (leaf[idx] for leaf in leaves)
+        out = _decode_kv_rows(bm, sm, ew, mo, em, book32, d=d, keep=keep,
+                              trunc=trunc, exp_bits=exp_bits)
+        return out.reshape(bs, hkv, d)
+
+    if impl == "jnp":
+        def row(qr, tbl_row, ln):
+            def body(carry, j):
+                m, l, acc = carry
+                kb = decode_block(kf, tbl_row[j])
+                vb = decode_block(vf, tbl_row[j])
+                valid = j * bs + jnp.arange(bs) < ln
+                m, l, acc = _gqa_block(qr, kb, vb, valid, m, l, acc,
+                                       scale=scale)
+                return (m, l, acc), None
+
+            init = (jnp.full((hkv, g, t), NEG_INF, jnp.float32),
+                    jnp.zeros((hkv, g, t), jnp.float32),
+                    jnp.zeros((hkv, g, t, d), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(
+                body, init, jnp.arange(mb, dtype=jnp.int32))
+            return acc, m, l
+
+        return jax.vmap(row)(qf, table, length)
+
+    def pool_spec(w):
+        return pl.BlockSpec((1, rows, w),
+                            lambda bi, j, tbl, ln: (tbl[bi, j], 0, 0))
+
+    def scalar_spec():
+        return pl.BlockSpec((1, rows),
+                            lambda bi, j, tbl, ln: (tbl[bi, j], 0))
+
+    in_specs = [pl.BlockSpec((1, t, hkv, g, dq),
+                             lambda bi, j, tbl, ln: (bi, 0, 0, 0, 0))]
+    operands = [qf]
+    for leaves in (kf, vf):
+        bm, sm, ew, mo, em = leaves
+        in_specs += [pool_spec(bm.shape[-1]), pool_spec(sm.shape[-1]),
+                     pool_spec(ew.shape[-1]), scalar_spec(), scalar_spec()]
+        operands += [bm, sm, ew, mo, em]
+    in_specs.append(pl.BlockSpec((32,), lambda bi, j, tbl, ln: (0,)))
+    operands.append(book32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, hkv, g, t, d),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, g, t),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, g, t),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0)),
+        ],
+    )
+    kwargs: dict[str, Any] = {}
+    if impl == "interpret":
+        kwargs["interpret"] = True
+    elif _CompilerParams is not None:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    acc, m, l = pl.pallas_call(
+        functools.partial(
+            _gqa_packed_kernel, scale=scale, block_size=bs, hkv=hkv,
+            d=d, keep=keep, trunc=trunc, exp_bits=exp_bits),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, t), jnp.float32),
+        ],
+        **kwargs,
+    )(table, length, *operands)
+    return acc, m, l
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def paged_mla(q_eff: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
+              kr_pool: jax.Array, table: jax.Array, length: jax.Array,
+              *, scale: float, impl: str = "jnp"):
+    """Paged MLA decode attention in latent space (absorbed math).
+
+    q_eff: (B, T, H, L) f32 — q_nope absorbed through w_uk ·
+    q_rope: (B, T, H, R) · c_pool: (NB, BS, L) · kr_pool: (NB, BS, R) ·
+    table: (B, MB) · length: (B,).
+    Returns (acc (B, H, T, L) f32, m (B, H, T) f32, l (B, H, T) f32).
+    This is also the latent-space flash kernel for long MLA prefill.
+    """
+    b, t, h, latent = q_eff.shape
+    r_dim = q_rope.shape[-1]
+    nb, bs, _ = c_pool.shape
+    mb = table.shape[1]
+    table = sanitize_table(table, nb)
+    length = length.astype(jnp.int32)
+    qe = q_eff.astype(jnp.float32)
+    qr = q_rope.astype(jnp.float32)
+
+    if impl == "jnp":
+        def row(qer, qrr, tbl_row, ln):
+            def body(carry, j):
+                m, l, acc = carry
+                cb = c_pool[tbl_row[j]]
+                krb = kr_pool[tbl_row[j]]
+                valid = j * bs + jnp.arange(bs) < ln
+                m, l, acc = _mla_block(qer, qrr, cb, krb, valid, m, l,
+                                       acc, scale=scale)
+                return (m, l, acc), None
+
+            init = (jnp.full((h, t), NEG_INF, jnp.float32),
+                    jnp.zeros((h, t), jnp.float32),
+                    jnp.zeros((h, t, latent), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(
+                body, init, jnp.arange(mb, dtype=jnp.int32))
+            return acc, m, l
+
+        return jax.vmap(row)(qe, qr, table, length)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mb),
+        in_specs=[
+            pl.BlockSpec((1, t, h, latent),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, t, h, r_dim),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, bs, latent),
+                         lambda bi, j, tbl, ln: (tbl[bi, j], 0, 0)),
+            pl.BlockSpec((1, bs, r_dim),
+                         lambda bi, j, tbl, ln: (tbl[bi, j], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, t, latent),
+                         lambda bi, j, tbl, ln: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, h, t), lambda bi, j, tbl, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, h, t), lambda bi, j, tbl, ln: (bi, 0, 0)),
+        ],
+    )
+    kwargs: dict[str, Any] = {}
+    if impl == "interpret":
+        kwargs["interpret"] = True
+    elif _CompilerParams is not None:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    acc, m, l = pl.pallas_call(
+        functools.partial(_mla_kernel, scale=scale, block_size=bs),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, latent), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, t), jnp.float32),
+        ],
+        **kwargs,
+    )(table, length, qe, qr, c_pool, kr_pool)
+    return acc, m, l
+
+
+# ---------------------------------------------------------------------------
+# Suffix merge: the scratch/new tokens live outside the pool; fold them
+# in with one more flash step per row, then normalise.
+# ---------------------------------------------------------------------------
+
+
+def merge_gqa_suffix(acc: jax.Array, m: jax.Array, l: jax.Array,
+                     q: jax.Array, suf_k: jax.Array, suf_v: jax.Array,
+                     suf_valid: jax.Array, *, scale: float) -> jax.Array:
+    """Fold a (B, S, Hkv, D) suffix into paged flash state; normalise.
+
+    ``suf_valid`` is (B, T, S) bool (per-query-token, so the causal
+    triangle over the new tokens rides in). Returns (B, T, Hkv, G, Dv)
+    f32 attention output.
+    """
+    def row(accr, mr, lr, qr, kr, vr, validr):
+        # validr: (T, S). Score mask is per-query-token; value zeroing
+        # uses "valid for any t" (a never-valid suffix row may be junk).
+        vz = jnp.where(jnp.any(validr, axis=0)[:, None, None], vr, 0)
+        s = jnp.einsum("thgd,shd->hgts", qr, kr.astype(jnp.float32)) * scale
+        vm = validr[None, None]                            # (1, 1, T, S)
+        s = jnp.where(vm, s, NEG_INF)
+        m_new = jnp.maximum(mr, jnp.max(s, axis=-1))
+        p = jnp.where(vm, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(mr - m_new)
+        l_new = lr * corr + jnp.sum(p, axis=-1)
+        acc_new = accr * corr[..., None] + jnp.einsum(
+            "hgts,shd->hgtd", p, vz.astype(jnp.float32))
+        out = acc_new / jnp.maximum(l_new[..., None], 1e-30)
+        return out                                         # (Hkv,G,T,Dv)
+
+    out = jax.vmap(row)(acc, m, l, q.astype(jnp.float32), suf_k, suf_v,
+                        suf_valid)
+    return jnp.transpose(out, (0, 3, 1, 2, 4))             # (B,T,Hkv,G,Dv)
+
+
+def merge_mla_suffix(acc: jax.Array, m: jax.Array, l: jax.Array,
+                     q_eff: jax.Array, q_rope: jax.Array,
+                     suf_c: jax.Array, suf_kr: jax.Array,
+                     suf_valid: jax.Array, *, scale: float) -> jax.Array:
+    """Fold a (B, S, L)+(B, S, R) latent suffix in; normalise.
+
+    ``suf_valid`` is (B, T, S) bool. Returns (B, T, H, L) f32 latent
+    context (caller applies w_uv).
+    """
+    def row(accr, mr, lr, qer, qrr, cr, krr, validr):
+        cz = jnp.where(jnp.any(validr, axis=0)[:, None], cr, 0)
+        czf = cz.astype(jnp.float32)
+        krf = jnp.where(jnp.any(validr, axis=0)[:, None], krr,
+                        0).astype(jnp.float32)
+        s = (jnp.einsum("thl,sl->hts", qer, czf)
+             + jnp.einsum("thr,sr->hts", qrr, krf)) * scale
+        vm = validr[None]                                  # (1, T, S)
+        s = jnp.where(vm, s, NEG_INF)
+        m_new = jnp.maximum(mr, jnp.max(s, axis=-1))
+        p = jnp.where(vm, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(mr - m_new)
+        l_new = lr * corr + jnp.sum(p, axis=-1)
+        acc_new = accr * corr[..., None] + jnp.einsum("hts,sl->htl", p, czf)
+        return acc_new / jnp.maximum(l_new[..., None], 1e-30)  # (H,T,L)
+
+    out = jax.vmap(row)(acc, m, l, q_eff.astype(jnp.float32),
+                        q_rope.astype(jnp.float32), suf_c, suf_kr,
+                        suf_valid)
+    return jnp.transpose(out, (0, 2, 1, 3))                # (B,T,H,L)

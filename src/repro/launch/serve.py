@@ -170,6 +170,21 @@ def run(argv=None):
     ap.add_argument("--itl-target-ms", type=float, default=None,
                     help="per-request ITL SLO: max tolerated inter-token "
                     "gap in ms (applied to every request)")
+    ap.add_argument("--attn-kernel", default="off",
+                    choices=["off", "jnp", "interpret", "pallas"],
+                    help="paged-attention decode kernel for the serving "
+                    "hot path (requires --paged): 'off' keeps the "
+                    "gather-then-attend path, 'jnp' the gather-free scan "
+                    "reference, 'interpret'/'pallas' the Pallas kernel "
+                    "that walks the block table in-kernel (interpret = "
+                    "CPU). Lossless — same tokens as 'off'")
+    ap.add_argument("--attn-chunk-q", type=int, default=None,
+                    help="flash-attention query chunk for the dense "
+                    "prefill path (default: attention.DEFAULT_CHUNK_Q; "
+                    "serving configs may pin per arch)")
+    ap.add_argument("--attn-chunk-k", type=int, default=None,
+                    help="flash-attention key chunk for the dense "
+                    "prefill path (default: attention.DEFAULT_CHUNK_K)")
     ap.add_argument("--fifo", action="store_true",
                     help="disable SLO-aware goodput scheduling: keep the "
                     "legacy priority-then-FIFO decision paths even when "
@@ -188,6 +203,9 @@ def run(argv=None):
     if args.swap and not args.paged:
         ap.error("--swap requires --paged (preemption spills and "
                  "restores pool blocks through block tables)")
+    if args.attn_kernel != "off" and not args.paged:
+        ap.error("--attn-kernel requires --paged (the kernel walks the "
+                 "block table in-kernel)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)
@@ -228,6 +246,10 @@ def run(argv=None):
 
     ecfg = EngineConfig(gamma=args.gamma, greedy=args.greedy)
     rt_extra = {"ssm_chunk": 8 if args.smoke else 64}
+    if args.attn_chunk_q is not None:
+        rt_extra["attn_chunk_q"] = args.attn_chunk_q
+    if args.attn_chunk_k is not None:
+        rt_extra["attn_chunk_k"] = args.attn_chunk_k
 
     if args.scheduler:
         s_max = args.prompt_len + args.max_new + args.gamma + 1
@@ -244,7 +266,8 @@ def run(argv=None):
                           prefix_cache_blocks=args.prefix_cache_blocks,
                           swap=args.swap,
                           swap_store_blocks=args.swap_store_blocks,
-                          slo_aware=not args.fifo)
+                          slo_aware=not args.fifo,
+                          attn_kernel=args.attn_kernel)
         t0 = time.perf_counter()
         for i in range(args.requests):
             # odd-numbered requests carry the per-request stop list; even

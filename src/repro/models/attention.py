@@ -21,10 +21,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import paged_attention as PA
 from repro.models import layers as L
 from repro.models.layers import Runtime
 
 NEG_INF = -1e30
+
+# Default flash chunk sizes. Threaded through ``Runtime.attn_chunk_q/k``
+# (serve.py ``--attn-chunk-q/k`` pins them per arch; kernel_bench sweeps
+# them) — these constants are only the fallback when no runtime is in
+# play. No behaviour change at default.
+DEFAULT_CHUNK_Q = 1024
+DEFAULT_CHUNK_K = 1024
 
 
 # ---------------------------------------------------------------------------
@@ -48,7 +56,8 @@ def _attend_dense(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def _attend_flash(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
-                  q_offset: int, chunk_q: int, chunk_k: int) -> jax.Array:
+                  q_offset: int, chunk_q: int = DEFAULT_CHUNK_Q,
+                  chunk_k: int = DEFAULT_CHUNK_K) -> jax.Array:
     """Chunked online-softmax attention (pure-jnp flash).
 
     q (B,Sq,H,D), k/v (B,Sk,Hkv,D*). Sq % chunk_q == 0, Sk % chunk_k == 0.
@@ -103,6 +112,71 @@ def _attend_flash(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
     _, outs = jax.lax.scan(q_step, None, (qc, q_pos_base))     # (nq,b,cq,...)
     out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dv)
     return out.astype(q.dtype)
+
+
+def _attend_flash_latent(q_eff: jax.Array, q_rope: jax.Array, c: jax.Array,
+                         kr: jax.Array, *, causal: bool, scale: float,
+                         chunk_q: int = DEFAULT_CHUNK_Q,
+                         chunk_k: int = DEFAULT_CHUNK_K) -> jax.Array:
+    """Chunked online-softmax MLA attention *in latent space*.
+
+    q_eff (B,Sq,H,L) f32 (q_nope absorbed through w_uk), q_rope
+    (B,Sq,H,R), c (B,Sk,L), kr (B,Sk,R). Scores and context both live in
+    the latent dim, so per-head K/V are never materialised — the same
+    association order as the absorbed decode path, chunked so the
+    (Sq, Sk) score matrix never exists. Returns latent context
+    (B,Sq,H,L) f32; the caller applies w_uv.
+    """
+    b, sq, h, latent = q_eff.shape
+    sk = c.shape[1]
+    r_dim = kr.shape[-1]
+    cq, ck = min(chunk_q, sq), min(chunk_k, sk)
+    while sq % cq:
+        cq -= 1
+    while sk % ck:
+        ck -= 1
+    nq, nk = sq // cq, sk // ck
+
+    qec = jnp.moveaxis(q_eff.reshape(b, nq, cq, h, latent), 1, 0)
+    qrc = jnp.moveaxis(
+        q_rope.astype(jnp.float32).reshape(b, nq, cq, h, r_dim), 1, 0)
+    cc = jnp.moveaxis(c.astype(jnp.float32).reshape(b, nk, ck, latent), 1, 0)
+    krc = jnp.moveaxis(
+        kr.astype(jnp.float32).reshape(b, nk, ck, r_dim), 1, 0)
+    q_pos_base = jnp.arange(nq) * cq
+
+    def q_step(_, xs):
+        qei, qri, qbase = xs
+        qpos = qbase + jnp.arange(cq)
+
+        def kv_step(carry, ys):
+            m, l, acc = carry
+            cj, krj, kbase = ys
+            kpos = kbase + jnp.arange(ck)
+            s = (jnp.einsum("bqhl,bkl->bhqk", qei, cj)
+                 + jnp.einsum("bqhr,bkr->bhqk", qri, krj)) * scale
+            if causal:
+                cm = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(cm[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkl->bhql", p, cj)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, latent), jnp.float32)
+        kbases = jnp.arange(nk) * ck
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (cc, krc, kbases))
+        ctx = acc / jnp.maximum(l[..., None], 1e-30)           # (b,h,cq,L)
+        return None, jnp.moveaxis(ctx, 2, 1)                   # (b,cq,h,L)
+
+    _, outs = jax.lax.scan(q_step, None, (qec, qrc, q_pos_base))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, latent)
 
 
 def causal_mask(sq: int, sk: int, q_offset) -> jax.Array:
@@ -272,7 +346,10 @@ def mla_attention(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array,
     flash) used to sit ~1e-2 off the absorbed path, which deepseek's MoE
     router amplified into expert flips (the prefill-vs-decode drift).
     Beyond 2048 tokens the latent score matrix is the quadratic-memory
-    killer, so long prefill stays naive+flash (tolerance documented in
+    killer, so long prefill runs ``_attend_flash_latent`` — chunked
+    flash with absorbed-order scores/context, so per-head K/V are never
+    materialised and the only prefill-vs-decode difference left is the
+    online-softmax association order (tolerance documented in
     tests/test_models.py).
     """
     cfg = rt.cfg
@@ -282,21 +359,18 @@ def mla_attention(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array,
     new_c, new_kr = mla_latent(rt, p, x, positions)
 
     if prefix_latent is None and sq > 2048:
-        # naive path: per-head K/V from latent, chunked flash attention
+        # latent flash: absorbed math, chunked — the PR 2 leftover
+        # (per-head K/V materialisation off the absorbed path) is gone.
         w_uk, w_uv = _kv_b_split(rt, p)
-        k_nope = jnp.einsum("bsl,lhn->bshn", new_c.astype(jnp.float32),
-                            w_uk.astype(jnp.float32)).astype(x.dtype)
-        vv = jnp.einsum("bsl,lhn->bshn", new_c.astype(jnp.float32),
-                        w_uv.astype(jnp.float32)).astype(x.dtype)
-        k = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(new_kr[:, :, None],
-                                      (b, sq, cfg.n_heads, cfg.qk_rope_dim))],
-            axis=-1)
-        q = jnp.concatenate([q_nope, q_rope], axis=-1)
-        q = rt.shard_act(q, ("batch", None, "heads", None))
-        out = _attend_flash(q, k, vv, causal=causal, q_offset=0,
-                            chunk_q=rt.attn_chunk_q,
-                            chunk_k=rt.attn_chunk_k)
+        q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        q_eff = rt.shard_act(q_eff, ("batch", None, "heads", None))
+        ctx = _attend_flash_latent(q_eff, q_rope, new_c, new_kr,
+                                   causal=causal, scale=scale,
+                                   chunk_q=rt.attn_chunk_q,
+                                   chunk_k=rt.attn_chunk_k)
+        out = jnp.einsum("bqhl,lhn->bqhn", ctx,
+                         w_uv.astype(jnp.float32)).astype(x.dtype)
     else:
         # absorbed path over the latents (sequence-parallel decode:
         # latents token-sharded, q replicated — mirrors GQA decode)
@@ -331,5 +405,121 @@ def mla_attention(rt: Runtime, p: dict, x: jax.Array, positions: jax.Array,
         out = jnp.einsum("bqhl,lhn->bqhn", ctx, w_uv.astype(jnp.float32))
         out = out.astype(x.dtype)
 
+    out = out.reshape(b, sq, cfg.n_heads * cfg.v_head_dim)
+    return L.dense(rt, p["wo"], out, "mla.wo"), (new_c, new_kr)
+
+
+# ---------------------------------------------------------------------------
+# Paged-kernel decode entry points (attn_kernel knob). The block-table
+# walk + pool flash run in kernels/paged_attention; the scratch/new-token
+# suffix (which lives outside the pool) is folded in with one more flash
+# step, then wo as usual.
+# ---------------------------------------------------------------------------
+
+
+def _suffix_valid(b: int, sq: int, g_scratch: int, scratch_len) -> jax.Array:
+    """(B, Sq, g_scratch + Sq) bool: scratch validity + causal triangle."""
+    parts = []
+    if g_scratch:
+        gv = jnp.arange(g_scratch) < scratch_len
+        parts.append(jnp.broadcast_to(gv[None, None], (b, sq, g_scratch)))
+    tri = causal_mask(sq, sq, 0)[0]                        # (1, Sq, Sq)
+    parts.append(jnp.broadcast_to(tri, (b, sq, sq)))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def gqa_attention_paged(rt: Runtime, p: dict, x: jax.Array,
+                        positions: jax.Array, *, kv_pools: tuple,
+                        table: jax.Array, length: jax.Array,
+                        scratch: dict | None, scratch_len
+                        ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """GQA cached decode through the paged-attention kernel.
+
+    ``kv_pools`` is ``("plain", k_pool, v_pool)`` (bf16 (NB,BS,Hkv,hd)
+    pool blocks) or ``("packed", k_spec, v_spec, book, keep)`` (the
+    Cassandra spec leaf dicts — decode runs inside the kernel). The
+    per-request dense prefix is never gathered.
+    """
+    cfg = rt.cfg
+    b, sq, _ = x.shape
+    hkv = cfg.n_kv_heads
+    g = cfg.n_heads // hkv
+    scale = 1.0 / (cfg.hd ** 0.5)
+    q = gqa_project_q(rt, p, x, positions)
+    q = rt.shard_act(q, ("batch", None, None, None))
+    new_k, new_v = gqa_project_kv(rt, p, x, positions)
+    qg = q.reshape(b, sq, hkv, g, cfg.hd)
+    length = jnp.broadcast_to(jnp.atleast_1d(length), (b,))
+    impl = rt.attn_kernel
+
+    if kv_pools[0] == "packed":
+        _, k_spec, v_spec, book, keep = kv_pools
+        acc, m, l = PA.paged_gqa_packed(
+            qg, k_spec, v_spec, table, length, book, d=cfg.hd, keep=keep,
+            trunc=rt.cass.kv_trunc, exp_bits=rt.cass.exp_bits,
+            scale=scale, impl=impl)
+    else:
+        _, k_pool, v_pool = kv_pools
+        acc, m, l = PA.paged_gqa(qg, k_pool, v_pool, table, length,
+                                 scale=scale, impl=impl)
+
+    if scratch is not None:
+        g_s = scratch["k"].shape[1]
+        suf_k = jnp.concatenate(
+            [scratch["k"], new_k.astype(scratch["k"].dtype)], axis=1)
+        suf_v = jnp.concatenate(
+            [scratch["v"], new_v.astype(scratch["v"].dtype)], axis=1)
+    else:
+        g_s = 0
+        suf_k, suf_v = new_k, new_v
+    suf_valid = _suffix_valid(b, sq, g_s, scratch_len)
+    out = PA.merge_gqa_suffix(acc, m, l, qg, suf_k, suf_v, suf_valid,
+                              scale=scale)                 # (B,Sq,hkv,g,hd)
+    out = out.reshape(b, sq, cfg.n_heads * cfg.hd).astype(x.dtype)
+    return L.dense(rt, p["wo"], out, "attn.wo"), (new_k, new_v)
+
+
+def mla_attention_paged(rt: Runtime, p: dict, x: jax.Array,
+                        positions: jax.Array, *, c_pool: jax.Array,
+                        kr_pool: jax.Array, table: jax.Array,
+                        length: jax.Array, scratch: dict | None,
+                        scratch_len
+                        ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """MLA cached decode through the paged latent-flash kernel.
+
+    The kernel consumes the (c, k_rope) latent pools directly with
+    absorbed-order math — the same latent flash that serves >2048
+    prefill, walking the block table instead of a contiguous sequence.
+    (MLA pools are always plain: the rope dim is too narrow for the
+    32-lane Cassandra bit-pack, so packed MLA caches don't exist.)
+    """
+    cfg = rt.cfg
+    b, sq, _ = x.shape
+    scale = 1.0 / ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5)
+    q_nope, q_rope = _mla_q(rt, p, x, positions)
+    new_c, new_kr = mla_latent(rt, p, x, positions)
+    w_uk, w_uv = _kv_b_split(rt, p)
+    q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    length = jnp.broadcast_to(jnp.atleast_1d(length), (b,))
+
+    acc, m, l = PA.paged_mla(q_eff, q_rope.astype(jnp.float32), c_pool,
+                             kr_pool, table, length, scale=scale,
+                             impl=rt.attn_kernel)
+
+    if scratch is not None:
+        g_s = scratch["c"].shape[1]
+        suf_c = jnp.concatenate(
+            [scratch["c"], new_c.astype(scratch["c"].dtype)], axis=1)
+        suf_kr = jnp.concatenate(
+            [scratch["kr"], new_kr.astype(scratch["kr"].dtype)], axis=1)
+    else:
+        g_s = 0
+        suf_c, suf_kr = new_c, new_kr
+    suf_valid = _suffix_valid(b, sq, g_s, scratch_len)
+    ctx = PA.merge_mla_suffix(acc, m, l, q_eff, q_rope, suf_c, suf_kr,
+                              suf_valid, scale=scale)      # (B,Sq,H,L)
+    out = jnp.einsum("bqhl,lhn->bqhn", ctx,
+                     w_uv.astype(jnp.float32)).astype(x.dtype)
     out = out.reshape(b, sq, cfg.n_heads * cfg.v_head_dim)
     return L.dense(rt, p["wo"], out, "mla.wo"), (new_c, new_kr)

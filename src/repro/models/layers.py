@@ -41,6 +41,10 @@ class Runtime:
     shard: Callable | None = None       # logical activation-sharding hook
     collector: Any = None               # calibration stats collector (non-jit)
     kernels: str = "jnp"                # jnp | interpret | pallas
+    attn_kernel: str = "off"            # off | jnp | interpret | pallas —
+    # paged-attention decode kernel (kernels/paged_attention): "off" keeps
+    # the gather_block_leaf path; "jnp" the gather-free scan reference;
+    # "interpret"/"pallas" the Pallas kernel (interpret = CPU CI).
     attn_chunk_q: int = 1024
     attn_chunk_k: int = 1024
     ssm_chunk: int = 64

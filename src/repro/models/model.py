@@ -219,7 +219,10 @@ def _attn_entry(rt: Runtime, bp: dict, x, positions, *, causal, centry,
     ``table`` — paged caches only: (B,MB) block table; the cache entry (or
     its ventry) is a block pool decoded pool-wide, and the per-request
     prefix is assembled by ``kvcache.gather_block_leaf``. ``s_max`` is
-    then the virtual per-request capacity MB*BS.
+    then the virtual per-request capacity MB*BS. When
+    ``rt.attn_kernel != "off"`` the gather never happens: the
+    paged-attention kernel walks the table in-kernel instead (and for
+    packed GQA draft passes, runs the Cassandra decode in-kernel too).
     """
     cfg = rt.cfg
     cass = rt.cass
@@ -231,6 +234,12 @@ def _attn_entry(rt: Runtime, bp: dict, x, positions, *, causal, centry,
             return out, {"c": kv[0], "kr": kv[1]}
         out, kv = A.gqa_attention(rt, bp["attn"], x, positions, causal=causal)
         return out, {"k": kv[0], "v": kv[1]}
+
+    if rt.attn_kernel != "off" and table is not None:
+        return _attn_entry_paged(rt, bp, x, positions, centry=centry,
+                                 scratch=scratch, length=length,
+                                 scratch_len=scratch_len, book=book,
+                                 ventry=ventry, table=table)
 
     # cached decode: assemble prefix = cache view ++ scratch
     if jnp.ndim(length) == 1:                # per-batch lengths (B,)
@@ -279,6 +288,50 @@ def _attn_entry(rt: Runtime, bp: dict, x, positions, *, causal, centry,
         valid = cat_valid(valid, scratch["k"].shape[1])
     out, (nk, nv) = A.gqa_attention(rt, bp["attn"], x, positions,
                                     prefix_kv=(pk, pv), prefix_valid=valid)
+    return out, {"k": nk, "v": nv}
+
+
+def _attn_entry_paged(rt: Runtime, bp: dict, x, positions, *, centry,
+                      scratch, length, scratch_len, book, ventry, table):
+    """Cached decode through kernels/paged_attention (attn_kernel knob).
+
+    The pool stays in pool layout; the per-request prefix is never
+    gathered. Packed GQA caches feed the draft pass their *spec leaves*
+    directly — the Cassandra decode runs inside the kernel, so draft KV
+    never exists densely in HBM. The verify pass (target view) and all
+    MLA paths read a dense pool (``ventry``/``read_store``) through the
+    plain kernel variant — MLA caches can't pack (the rope dim is
+    narrower than the 32-lane bit-pack).
+    """
+    cfg = rt.cfg
+    cass = rt.cass
+    view = "draft" if rt.view == "draft" else "target"
+    if cfg.mla:
+        if ventry is not None:
+            pc, pkr = ventry["c"], ventry["kr"]
+        else:
+            pc = KC.read_store(cass, centry["c"], cfg.kv_lora_rank, view,
+                               book)
+            pkr = KC.read_store(cass, centry["kr"], cfg.qk_rope_dim, view,
+                                book)
+        out, (nc, nkr) = A.mla_attention_paged(
+            rt, bp["attn"], x, positions, c_pool=pc, kr_pool=pkr,
+            table=table, length=length, scratch=scratch,
+            scratch_len=scratch_len)
+        return out, {"c": nc, "kr": nkr}
+    if ventry is None and KC.is_packed(centry["k"]) and view == "draft":
+        kv_pools = ("packed", centry["k"]["spec"], centry["v"]["spec"],
+                    book[0], cass.kv_keep(cfg.hd))
+    else:
+        if ventry is not None:
+            pk, pv = ventry["k"], ventry["v"]
+        else:
+            pk = KC.read_store(cass, centry["k"], cfg.hd, view, book)
+            pv = KC.read_store(cass, centry["v"], cfg.hd, view, book)
+        kv_pools = ("plain", pk, pv)
+    out, (nk, nv) = A.gqa_attention_paged(
+        rt, bp["attn"], x, positions, kv_pools=kv_pools, table=table,
+        length=length, scratch=scratch, scratch_len=scratch_len)
     return out, {"k": nk, "v": nv}
 
 

@@ -73,7 +73,8 @@ def validate_serving_knobs(cfg: ModelConfig, *, gamma: int, num_slots: int,
                            swap: bool = False,
                            swap_store_blocks: int | None = None,
                            ttft_deadline_ms: float | None = None,
-                           itl_target_ms: float | None = None) -> None:
+                           itl_target_ms: float | None = None,
+                           attn_kernel: str = "off") -> None:
     """Fail fast on inconsistent serving knobs.
 
     Every check here used to surface as a jit-time shape error, a silent
@@ -111,6 +112,14 @@ def validate_serving_knobs(cfg: ModelConfig, *, gamma: int, num_slots: int,
             raise ValueError(
                 f"num_blocks={num_blocks}: the pool needs at least one "
                 "allocatable block besides the reserved trash block")
+    if attn_kernel not in ("off", "jnp", "interpret", "pallas"):
+        raise ValueError(
+            f"attn_kernel={attn_kernel!r}: expected one of "
+            "off|jnp|interpret|pallas")
+    if attn_kernel != "off" and not paged:
+        raise ValueError(
+            "attn_kernel walks the (B,MB) block table in-kernel — it "
+            "requires the paged layout (paged=True)")
     if prefix_cache_blocks is not None and not prefix_cache:
         raise ValueError("prefix_cache_blocks is set but the prefix "
                          "cache is off")
@@ -314,8 +323,15 @@ def _run_drafts(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
         return jax.random.categorical(
             sub, lg / ecfg.temperature).astype(jnp.int32), key
 
-    # decode the draft view of the packed cache ONCE for all γ steps
-    draft_view = M.materialize_cache_view(rt_d, cache)
+    # decode the draft view of the packed cache ONCE for all γ steps —
+    # unless the paged-attention kernel is on: it decodes the packed
+    # stream *inside* the kernel per pass (zero HBM expansion traffic),
+    # so pre-materialising would both waste the decode and silently
+    # reroute the draft pass onto the dense-pool variant.
+    if rt.attn_kernel != "off" and KC.is_paged(cache):
+        draft_view = None
+    else:
+        draft_view = M.materialize_cache_view(rt_d, cache)
     draft_tokens = []
     draft_logits = []
     if ecfg.stable_draft:

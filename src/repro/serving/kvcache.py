@@ -169,7 +169,17 @@ def gather_block_leaf(pool: jax.Array, table: jax.Array) -> jax.Array:
     table is a *traced* operand — allocation, growth and recycling never
     trigger a recompile; positions past a row's committed ``length`` are
     stale pool data masked out by the attention validity prefix.
+
+    Out-of-range table entries route through the trash block (index 0,
+    the ``append_paged_batched`` convention) — NOT through
+    ``mode="clip"``'s silent alias to the *last* pool block — so the
+    gather path and the paged-attention kernel (which sanitises the same
+    way) agree on what a garbage slot reads. ``Scheduler.
+    check_invariants`` asserts host-side tables never exceed
+    ``num_blocks``; this is the belt-and-braces for traced values.
     """
+    nb = pool.shape[0]
+    table = jnp.where((table >= 0) & (table < nb), table, TRASH_BLOCK)
     out = jnp.take(pool, table, axis=0, mode="clip")
     return out.reshape(table.shape[0],
                        table.shape[1] * pool.shape[1], *pool.shape[2:])

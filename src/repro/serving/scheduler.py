@@ -260,6 +260,7 @@ class Scheduler:
                  swap: bool = False,
                  swap_store_blocks: int | None = None,
                  slo_aware: bool = True,
+                 attn_kernel: str = "off",
                  debug_invariants: int | None = None):
         if cfg.frontend:
             raise NotImplementedError(
@@ -284,7 +285,9 @@ class Scheduler:
             num_blocks=num_blocks, prefix_cache=prefix_cache,
             prefix_cache_blocks=prefix_cache_blocks,
             max_prefill_tokens_per_step=max_prefill_tokens_per_step,
-            swap=swap, swap_store_blocks=swap_store_blocks)
+            swap=swap, swap_store_blocks=swap_store_blocks,
+            attn_kernel=attn_kernel)
+        self.attn_kernel = attn_kernel
         if paged:
             self.max_blocks = blocks_needed(s_max, block_size)
             # default pool: capacity-equivalent to the slot layout (+trash)
@@ -313,7 +316,8 @@ class Scheduler:
             debug_invariants = int(env) if env else 0
         self.debug_invariants = int(debug_invariants)
         self.rt = Runtime(cfg=cfg, cass=cass,
-                          view="target" if cass else "plain", **rt_extra)
+                          view="target" if cass else "plain",
+                          attn_kernel=attn_kernel, **rt_extra)
         packed = cass is not None
         if paged:
             self.cache = KC.init_paged_cache(
@@ -1278,6 +1282,12 @@ class Scheduler:
         if not self.paged:
             return
         self.pool.check_invariants()
+        # Host block tables must only hold physical block ids — the device
+        # side (gather_block_leaf, the paged-attention kernels) routes any
+        # out-of-range entry through the trash block, so an OOB id here
+        # means scheduler state corruption, not a recoverable condition.
+        assert self.table.min() >= 0 and self.table.max() < self.num_blocks, \
+            "host block table entry outside [0, num_blocks)"
         if self.prefix is not None:
             self.prefix.check_invariants()
         if self.spill is not None:

@@ -1,4 +1,11 @@
-"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps.
+
+The draft-matmul/unary/MX/top-k classes are slow-tier (their
+interpret-mode pallas_call compiles dominate, ~1 min of CPU).
+``TestPagedAttention`` runs in the PR tier: the paged-attention kernel
+sits on the serving hot path, so its parity contract is checked on
+every push at small pool scale.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,18 +13,17 @@ import pytest
 
 from repro.core import bitops, coding, mx
 from repro.core.format import CassandraConfig, format_weight
-from repro.kernels import ops, ref
+from repro.kernels import ops, paged_attention as pa, ref
+from repro.serving import kvcache as KC
 
 jax.config.update("jax_platform_name", "cpu")
-
-# interpret-mode pallas_call compiles dominate (~1 min of CPU)
-pytestmark = pytest.mark.slow
 
 
 def rand_bf16(key, shape, scale=1.0):
     return (jax.random.normal(key, shape) * scale).astype(jnp.bfloat16)
 
 
+@pytest.mark.slow
 class TestDraftMatmul:
     @pytest.mark.parametrize("shape,m", [((512, 128), 16), ((1024, 256), 8),
                                          ((512, 96), 4)])
@@ -64,6 +70,7 @@ class TestDraftMatmul:
                                    rtol=2e-2, atol=1e-3)
 
 
+@pytest.mark.slow
 class TestUnaryDecode:
     @pytest.mark.parametrize("k,nb", [(64, 8), (320, 4), (96, 16)])
     def test_vs_ref(self, k, nb):
@@ -80,6 +87,7 @@ class TestUnaryDecode:
                                       np.asarray(expect, np.int32))
 
 
+@pytest.mark.slow
 class TestMXDecode:
     @pytest.mark.parametrize("shape,group", [((8, 64), 32), ((16, 128), 16),
                                              ((4, 256), 32)])
@@ -95,6 +103,7 @@ class TestMXDecode:
             np.asarray(bitops.bf16_to_bits(expect)))
 
 
+@pytest.mark.slow
 class TestKVTopK:
     @pytest.mark.parametrize("r,d,keep", [(32, 128, 80), (16, 64, 32),
                                           (64, 128, 48)])
@@ -107,3 +116,182 @@ class TestKVTopK:
         np.testing.assert_array_equal(
             np.asarray(out["kept"], np.float32),
             np.asarray(expect["kept"], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (ISSUE 8) — fast tier
+# ---------------------------------------------------------------------------
+
+NB, BS, HKV, G, D = 10, 4, 2, 2, 64
+B, MB = 3, 5
+LENGTHS = np.array([0, 7, 20], dtype=np.int32)
+
+
+def _mk_table():
+    """Ragged tables with garbage in unused slots (must hit trash block)."""
+    rng = np.random.default_rng(0)
+    tbl = np.zeros((B, MB), np.int32)
+    perm = rng.permutation(np.arange(1, NB))
+    i = 0
+    for b in range(B):
+        for j in range(-(-int(LENGTHS[b]) // BS)):
+            tbl[b, j] = perm[i % len(perm)]
+            i += 1
+    tbl[0, 3] = -1          # out-of-range entries in masked slots:
+    tbl[1, 4] = 97          # sanitised to the trash block, never clipped
+    return jnp.asarray(tbl)
+
+
+class TestPagedAttention:
+    """Parity contracts of the table-walking decode kernel.
+
+    * plain pools: interpret == jnp BITWISE (same flash-step helpers on
+      identically shaped operands), and allclose to a dense softmax
+      oracle over the gathered prefix
+    * packed pools: the in-kernel Cassandra decode == the host
+      ``read_store`` draft view BITWISE (losslessness of the decode);
+      flash state vs the plain kernel over that view is allclose only —
+      float association order is compile-dependent across separately
+      jitted programs
+    * MLA latent pools: interpret == jnp BITWISE
+    """
+
+    def _rand(self, key, shape):
+        return rand_bf16(jax.random.PRNGKey(key), shape)
+
+    @pytest.mark.parametrize("t", [1, 6])
+    def test_plain_interpret_matches_jnp_bitwise(self, t):
+        tbl, ln = _mk_table(), jnp.asarray(LENGTHS)
+        q = self._rand(0, (B, t, HKV, G, D))
+        k_pool = self._rand(1, (NB, BS, HKV, D))
+        v_pool = self._rand(2, (NB, BS, HKV, D))
+        scale = 1.0 / D ** 0.5
+        r_j = pa.paged_gqa(q, k_pool, v_pool, tbl, ln, scale=scale,
+                           impl="jnp")
+        r_i = pa.paged_gqa(q, k_pool, v_pool, tbl, ln, scale=scale,
+                           impl="interpret")
+        for a, b in zip(r_i, r_j):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_plain_matches_dense_oracle(self):
+        tbl, ln = _mk_table(), jnp.asarray(LENGTHS)
+        t = 1
+        q = self._rand(0, (B, t, HKV, G, D))
+        k_pool = self._rand(1, (NB, BS, HKV, D))
+        v_pool = self._rand(2, (NB, BS, HKV, D))
+        scale = 1.0 / D ** 0.5
+        acc, m, l = pa.paged_gqa(q, k_pool, v_pool, tbl, ln, scale=scale,
+                                 impl="jnp")
+        out = np.asarray(acc) / np.maximum(np.asarray(l)[..., None], 1e-30)
+        tblh = np.where((np.asarray(tbl) >= 0) & (np.asarray(tbl) < NB),
+                        np.asarray(tbl), 0)
+        for b in range(B):
+            k = np.concatenate([np.asarray(k_pool[tblh[b, j]], np.float32)
+                                for j in range(MB)], 0)
+            v = np.concatenate([np.asarray(v_pool[tblh[b, j]], np.float32)
+                                for j in range(MB)], 0)
+            lb = int(LENGTHS[b])
+            if lb == 0:
+                np.testing.assert_array_equal(out[b], 0.0)
+                continue
+            s = np.einsum("thgd,shd->hgts",
+                          np.asarray(q[b], np.float32), k) * scale
+            s = np.where((np.arange(MB * BS) < lb)[None, None, None], s,
+                         -np.inf)
+            p = np.exp(s - s.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            oracle = np.einsum("hgts,shd->hgtd", p, v)
+            np.testing.assert_allclose(out[b], oracle, atol=2e-5)
+
+    def _packed_pools(self):
+        cass = CassandraConfig()
+        book = KC.default_kv_codebook()
+        eor = jnp.zeros(256, jnp.uint8).at[:book[0].shape[0]].set(book[0])
+        book = (eor, book[1])
+        k_store = KC.encode_store(cass, self._rand(3, (NB, BS, HKV, D)),
+                                  D, book)
+        v_store = KC.encode_store(cass, self._rand(4, (NB, BS, HKV, D)),
+                                  D, book)
+        return cass, book, k_store, v_store
+
+    def test_packed_decode_is_bitwise_lossless(self):
+        """In-kernel Cassandra decode == host draft view, bit for bit."""
+        cass, book, k_store, v_store = self._packed_pools()
+        for store in (k_store, v_store):
+            dec = pa.decode_spec_pool(store["spec"], book[0], d=D,
+                                      keep=cass.kv_keep(D),
+                                      trunc=cass.kv_trunc,
+                                      exp_bits=cass.exp_bits)
+            ref_view = KC.read_store(cass, store, D, "draft", book)
+            np.testing.assert_array_equal(
+                np.asarray(jax.lax.bitcast_convert_type(dec, jnp.uint16)),
+                np.asarray(jax.lax.bitcast_convert_type(ref_view,
+                                                        jnp.uint16)))
+
+    def test_packed_decode_lossless_wide_dims(self):
+        """Decode stays bitwise at d=128 (keep=80: the unary stream runs
+        into the exponent region's word padding — regression for the
+        strict-compare rank decode)."""
+        d = 128
+        cass = CassandraConfig()
+        book = KC.default_kv_codebook()
+        eor = jnp.zeros(256, jnp.uint8).at[:book[0].shape[0]].set(book[0])
+        book = (eor, book[1])
+        store = KC.encode_store(cass, self._rand(9, (NB, BS, HKV, d)),
+                                d, book)
+        dec = pa.decode_spec_pool(store["spec"], book[0], d=d,
+                                  keep=cass.kv_keep(d),
+                                  trunc=cass.kv_trunc,
+                                  exp_bits=cass.exp_bits)
+        ref_view = KC.read_store(cass, store, d, "draft", book)
+        np.testing.assert_array_equal(
+            np.asarray(jax.lax.bitcast_convert_type(dec, jnp.uint16)),
+            np.asarray(jax.lax.bitcast_convert_type(ref_view, jnp.uint16)))
+
+    @pytest.mark.parametrize("t", [1, 6])
+    def test_packed_flash_state(self, t):
+        cass, book, k_store, v_store = self._packed_pools()
+        tbl, ln = _mk_table(), jnp.asarray(LENGTHS)
+        q = self._rand(5, (B, t, HKV, G, D))
+        scale = 1.0 / D ** 0.5
+        kw = dict(d=D, keep=cass.kv_keep(D), trunc=cass.kv_trunc,
+                  exp_bits=cass.exp_bits, scale=scale)
+        r_j = pa.paged_gqa_packed(q, k_store["spec"], v_store["spec"],
+                                  tbl, ln, book[0], impl="jnp", **kw)
+        r_i = pa.paged_gqa_packed(q, k_store["spec"], v_store["spec"],
+                                  tbl, ln, book[0], impl="interpret", **kw)
+        for a, b in zip(r_i, r_j):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=1e-5)
+        # vs the plain kernel over the host-materialised draft view
+        kd = KC.read_store(cass, k_store, D, "draft", book)
+        vd = KC.read_store(cass, v_store, D, "draft", book)
+        r_p = pa.paged_gqa(q, kd, vd, tbl, ln, scale=scale, impl="jnp")
+        for a, b in zip(r_j, r_p):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=1e-5)
+
+    @pytest.mark.parametrize("t", [1, 6])
+    def test_mla_interpret_matches_jnp_bitwise(self, t):
+        lat, r_dim, h = 64, 16, 4
+        tbl, ln = _mk_table(), jnp.asarray(LENGTHS)
+        q_eff = jax.random.normal(jax.random.PRNGKey(6), (B, t, h, lat))
+        q_rope = jax.random.normal(jax.random.PRNGKey(7), (B, t, h, r_dim))
+        c_pool = self._rand(8, (NB, BS, lat))
+        kr_pool = self._rand(9, (NB, BS, r_dim))
+        scale = 1.0 / (32 + r_dim) ** 0.5
+        r_j = pa.paged_mla(q_eff, q_rope, c_pool, kr_pool, tbl, ln,
+                           scale=scale, impl="jnp")
+        r_i = pa.paged_mla(q_eff, q_rope, c_pool, kr_pool, tbl, ln,
+                           scale=scale, impl="interpret")
+        for a, b in zip(r_i, r_j):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_sanitize_table(self):
+        tbl = jnp.asarray([[0, 3, -1, 97, NB - 1]], jnp.int32)
+        out = np.asarray(pa.sanitize_table(tbl, NB))
+        np.testing.assert_array_equal(out, [[0, 3, 0, 0, NB - 1]])

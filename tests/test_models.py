@@ -145,8 +145,11 @@ def test_mla_prefill_decode_drift_regression():
     logits beyond 3% at smoke scale). Fix: the dense full-seq path now
     runs the same absorbed latent-space math as decode — the paths are
     bit-identical at smoke scale; this test pins a 100× tighter tolerance
-    than the 3e-2 the matrix test allows (the >2048-token flash prefill
-    path keeps the naive materialisation and the looser tolerance).
+    than the 3e-2 the matrix test allows. The >2048-token prefill path
+    now runs ``_attend_flash_latent`` (absorbed-order scores/context,
+    chunked): per-head K/V are never materialised and the only remaining
+    prefill-vs-decode difference is the online-softmax association order
+    (see test_mla_latent_flash_matches_absorbed below).
     """
     from repro.serving.engine import commit
     from repro.configs.base import ModelConfig
@@ -189,6 +192,38 @@ def test_mla_prefill_decode_drift_regression():
             np.asarray(full_logits[:, split + i], np.float32),
             rtol=3e-4, atol=3e-4)
         cache = commit(rt, cache, upd, jnp.zeros(B, jnp.int32))
+
+
+def test_mla_latent_flash_matches_absorbed():
+    """The >2048-token MLA prefill path (``_attend_flash_latent``) runs
+    the same absorbed-order math as the dense latent softmax — only the
+    online-softmax association differs, so the latent contexts agree to
+    float tolerance at any chunking (the PR 2 leftover: the old naive
+    path materialised per-head K/V and sat ~1e-2 off)."""
+    from repro.models.attention import _attend_flash_latent
+    b, s, h, lat, r = 2, 64, 4, 32, 16
+    key = jax.random.PRNGKey(0)
+    q_eff = jax.random.normal(key, (b, s, h, lat), jnp.float32)
+    q_rope = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, r))
+    c = (jax.random.normal(jax.random.fold_in(key, 2), (b, s, lat))
+         ).astype(jnp.bfloat16)
+    kr = (jax.random.normal(jax.random.fold_in(key, 3), (b, s, r))
+          ).astype(jnp.bfloat16)
+    scale = 1.0 / (32 + r) ** 0.5
+    # absorbed dense reference (one softmax, same association as decode)
+    sc = (jnp.einsum("bqhl,bkl->bhqk", q_eff, c.astype(jnp.float32))
+          + jnp.einsum("bqhr,bkr->bhqk", q_rope,
+                       kr.astype(jnp.float32))) * scale
+    mask = (jnp.arange(s)[:, None] >= jnp.arange(s)[None, :])[None, None]
+    sc = jnp.where(mask, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    ref = jnp.einsum("bhqk,bkl->bqhl", p, c.astype(jnp.float32))
+    for chunk in (16, 64):
+        out = _attend_flash_latent(q_eff, q_rope, c, kr, causal=True,
+                                   scale=scale, chunk_q=chunk,
+                                   chunk_k=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=1e-4)
 
 
 def test_layer_groups_cover_all_archs():

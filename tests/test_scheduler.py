@@ -622,6 +622,96 @@ def test_serving_knob_validation(model):
         Scheduler(ssm_cfg, None, ecfg=EngineConfig(gamma=GAMMA),
                   num_slots=2, s_max=S_MAX, paged=True, prefix_cache=True,
                   block_size=GAMMA + 1, chunk_size=GAMMA + 1)
+    with pytest.raises(ValueError, match="paged"):
+        mk(attn_kernel="jnp")                 # kernel walks block tables
+    with pytest.raises(ValueError, match="attn_kernel"):
+        mk(paged=True, block_size=4, attn_kernel="cuda")
+
+
+# -- paged-attention kernel (attn_kernel knob) -------------------------------
+
+
+def _run_attn_kernel_trace(cfg, params, cass, attn_kernel, max_new=MAX_NEW):
+    sched = Scheduler(cfg, params, cass=cass,
+                      ecfg=EngineConfig(gamma=GAMMA), num_slots=2,
+                      s_max=S_MAX, rt_extra={"ssm_chunk": 8}, paged=True,
+                      block_size=4, num_blocks=24,
+                      attn_kernel=attn_kernel)
+    reqs = [sched.submit(p, max_new=max_new, arrival=float(i))
+            for i, p in enumerate(_prompts(cfg, 4))]
+    sched.run()
+    return sched, [r.output for r in reqs]
+
+
+def test_attn_kernel_lossless_packed_gqa(model):
+    """ISSUE 8 losslessness pin: serving through the table-walking
+    paged-attention kernel — Cassandra-packed cache, so the draft pass
+    decodes KV *inside* the kernel and never materialises the dense
+    draft view — produces per-request outputs bitwise identical to the
+    gather-then-attend path, with every step still compiling once."""
+    from repro.core.format import CassandraConfig
+    from repro.core.packing import format_params
+    cfg, params = model
+    cass = CassandraConfig(variant=1, gamma=GAMMA)
+    packed = format_params(params, cass)
+    _, base = _run_attn_kernel_trace(cfg, packed, cass, "off")
+    on, outs = _run_attn_kernel_trace(cfg, packed, cass, "jnp")
+    assert outs == base
+    # zero recompiles after warmup: one trace per step bucket
+    assert all(c == 1 for c in on.trace_counts.values()), on.trace_counts
+
+
+def test_attn_kernel_lossless_plain(model):
+    """Plain bf16 pools through the kernel == gather path, autoregressive
+    (no speculation: the kernel also serves the variant-0 baseline)."""
+    cfg, params = model
+    outs = {}
+    for impl in ("off", "jnp"):
+        sched = Scheduler(cfg, params, cass=None,
+                          ecfg=EngineConfig(gamma=GAMMA), num_slots=2,
+                          s_max=S_MAX, rt_extra={"ssm_chunk": 8},
+                          paged=True, block_size=4, num_blocks=24,
+                          speculative=False, attn_kernel=impl)
+        reqs = [sched.submit(p, max_new=MAX_NEW)
+                for p in _prompts(cfg, 3)]
+        sched.run()
+        outs[impl] = [r.output for r in reqs]
+    assert outs["jnp"] == outs["off"]
+
+
+@pytest.mark.slow
+def test_attn_kernel_interpret_e2e(model):
+    """Slow tier: the actual Pallas kernel (interpret mode on CPU)
+    through a full packed serving trace — bitwise identical tokens."""
+    from repro.core.format import CassandraConfig
+    from repro.core.packing import format_params
+    cfg, params = model
+    cass = CassandraConfig(variant=1, gamma=GAMMA)
+    packed = format_params(params, cass)
+    _, base = _run_attn_kernel_trace(cfg, packed, cass, "off")
+    _, outs = _run_attn_kernel_trace(cfg, packed, cass, "interpret")
+    assert outs == base
+
+
+@pytest.mark.slow
+def test_attn_kernel_mla_paged(model):
+    """MLA decode through the paged latent-flash kernel (plain pools —
+    the rope dim is too narrow to pack): tokens == gather path."""
+    mcfg = get_config("deepseek-v3-671b", smoke=True)
+    mparams = init_params(mcfg, jax.random.PRNGKey(3))
+    outs = {}
+    for impl in ("off", "jnp", "interpret"):
+        sched = Scheduler(mcfg, mparams, cass=None,
+                          ecfg=EngineConfig(gamma=GAMMA), num_slots=2,
+                          s_max=S_MAX, rt_extra={"ssm_chunk": 8},
+                          paged=True, block_size=4, num_blocks=24,
+                          speculative=False, attn_kernel=impl)
+        reqs = [sched.submit(p, max_new=MAX_NEW)
+                for p in _prompts(mcfg, 3)]
+        sched.run()
+        outs[impl] = [r.output for r in reqs]
+    assert outs["jnp"] == outs["off"]
+    assert outs["interpret"] == outs["off"]
 
 
 # -- preemption + host swap --------------------------------------------------

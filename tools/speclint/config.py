@@ -61,15 +61,19 @@ RULES: dict[str, tuple[str, str]] = {
 @dataclasses.dataclass(frozen=True)
 class Config:
     """Knobs shared by every pass."""
-    # Scheduler/Engine attributes that hold jit-compiled entry points:
-    # a call through one of these produces traced values and is a
-    # recompile-hazard site. (The PR 7 SLO cost model adds NO entry
-    # here on purpose: serving/costmodel.py is host-side arithmetic
-    # over already-stamped walls — deadline math must never touch a
-    # traced value.)
+    # Names of jit-compiled entry points: a call through one of these
+    # produces traced values and is a recompile-hazard site. Matched as
+    # the attribute of any two-part dotted call — ``self._spec(...)``
+    # on the Scheduler/Engine, or a module-qualified kernel wrapper
+    # like ``PA.paged_gqa(...)`` (the PR 8 paged-attention entries).
+    # (The PR 7 SLO cost model adds NO entry here on purpose:
+    # serving/costmodel.py is host-side arithmetic over already-stamped
+    # walls — deadline math must never touch a traced value.)
     jit_entry_attrs: frozenset = frozenset({
         "_spec", "_auto", "_chunk", "_unified", "_cow", "_spill",
-        "_restore", "_prefill", "_scatter"})
+        "_restore", "_prefill", "_scatter",
+        "paged_gqa", "paged_gqa_packed", "paged_mla",
+        "decode_spec_pool"})
     # the only ``self.`` attributes allowed to hold device arrays
     device_self_attrs: frozenset = frozenset({"cache", "key"})
     # calls that move a traced value to host explicitly (sanctioned)

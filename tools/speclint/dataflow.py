@@ -174,8 +174,10 @@ class TaintVisitor:
                 return HOST
             if parts[0] in ("np", "numpy"):
                 return HOST
-            if (parts[0] == "self" and len(parts) == 2
+            if (len(parts) == 2
                     and parts[1] in self.cfg.jit_entry_attrs):
+                # self._spec(...) or a module-qualified kernel wrapper
+                # (PA.paged_gqa(...)) — jit entries return traced values
                 return TRACED
             if d in ("jax.tree.map", "jax.tree_util.tree_map"):
                 # jax.tree.map(np.asarray, ...) is a host conversion;

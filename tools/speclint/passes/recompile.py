@@ -133,7 +133,9 @@ def run(tree: ast.Module, path: str, source_lines: list[str], cfg):
             if not d:
                 continue
             parts = d.split(".")
-            if not (parts[0] == "self" and len(parts) == 2
+            # self._spec(...) on the scheduler, or a module-qualified
+            # kernel wrapper (PA.paged_gqa(...)) — both jit entries
+            if not (len(parts) == 2
                     and parts[1] in cfg.jit_entry_attrs):
                 continue
             for arg in list(node.args) + [k.value for k in
