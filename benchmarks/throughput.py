@@ -72,6 +72,7 @@ from repro.models import init_params
 from repro.serving.blockpool import blocks_needed
 from repro.serving.engine import EngineConfig
 from repro.serving.scheduler import Scheduler
+from repro.serving.telemetry import Telemetry, write_metrics, write_trace
 
 import sys
 import os
@@ -253,7 +254,6 @@ def run_prefix_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
         sched.run()
         s = sched.summary()
         s["wall_s"] = time.perf_counter() - t0
-        s["trace_counts"] = dict(sched.trace_counts)
         out["runs"][mode] = s
         outputs[mode] = [r.output for r in reqs]
         ttfts[mode] = [r.ttft_cycles for r in reqs]
@@ -370,7 +370,6 @@ def run_oversub_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
         s = sched.summary()
         s["wall_s"] = time.perf_counter() - t0
         s["num_blocks"] = num_blocks
-        s["trace_counts"] = dict(sched.trace_counts)
         outs = [r.output for r in reqs]
         ttfts = [r.ttft_cycles for r in reqs]
         del sched
@@ -525,7 +524,6 @@ def run_slo_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
         sched.run()
         s = sched.summary()
         s["wall_s"] = time.perf_counter() - t0
-        s["trace_counts"] = dict(sched.trace_counts)
         return s, reqs
 
     def hit(req, kind):
@@ -602,6 +600,91 @@ def run_slo_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     return out
 
 
+def run_telemetry_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
+    """Same paged trace through a telemetry-off and a tracing-on
+    scheduler: outputs and trace_counts must be bitwise identical (the
+    tracer adds no compile buckets and changes no tokens), and the
+    traced run's best-of-N tokens/s must stay within --telemetry-overhead
+    of the untraced run's. Wall time on shared runners is noisy, so each
+    mode replays the trace ``reps`` times interleaved and the gate
+    compares the best rep of each — steady-state overhead, not scheduler
+    jitter. The tracing run's final rep feeds --trace-out/--metrics-out."""
+    lens = [int(x) for x in args.mixed_lens.split(",")]
+    key = jax.random.PRNGKey(args.seed + 5)
+    prompts = [jax.device_get(jax.random.randint(
+        jax.random.fold_in(key, i), (lens[i % len(lens)],), 0,
+        cfg.vocab_size)) for i in range(args.requests)]
+    s_max = max(lens) + args.max_new + args.gamma + 1
+    s_max += (-s_max) % args.block_size
+    scheds = {
+        "off": Scheduler(cfg, params, cass=cass, ecfg=ecfg,
+                         num_slots=args.slots, s_max=s_max,
+                         rt_extra=rt_extra, paged=True,
+                         block_size=args.block_size,
+                         telemetry=Telemetry(trace=False)),
+        "on": Scheduler(cfg, params, cass=cass, ecfg=ecfg,
+                        num_slots=args.slots, s_max=s_max,
+                        rt_extra=rt_extra, paged=True,
+                        block_size=args.block_size,
+                        telemetry=Telemetry(trace=True)),
+    }
+    reps = 3
+    out = {"reps": reps, "overhead_budget": args.telemetry_overhead,
+           "runs": {}}
+    best = {}
+    outputs: dict = {}
+    for mode, sched in scheds.items():  # warm both compile caches first
+        run_trace(sched, prompts[:2], max_new=4, lam=4.0)
+    for rep in range(reps):
+        for mode, sched in scheds.items():
+            s, outs = run_trace(sched, prompts, max_new=args.max_new,
+                                lam=4.0)
+            if rep == 0:
+                outputs[mode] = outs
+            elif outputs[mode] != outs:
+                outputs[mode] = None  # nondeterminism — fails the gate
+            if mode not in best or s["tokens_per_s"] > best[mode]:
+                best[mode] = s["tokens_per_s"]
+            out["runs"][mode] = s
+    on, off = out["runs"]["on"], out["runs"]["off"]
+    out["tokens_per_s_best"] = dict(best)
+    out["overhead_frac"] = 1.0 - best["on"] / max(best["off"], 1e-9)
+    failures = []
+    if outputs["on"] is None or outputs["on"] != outputs["off"]:
+        failures.append("telemetry is not lossless: per-request outputs "
+                        "differ between the traced and untraced runs")
+    if on["trace_counts"] != off["trace_counts"]:
+        failures.append(
+            f"tracing changed compile buckets: on={on['trace_counts']} "
+            f"vs off={off['trace_counts']}")
+    if best["on"] < (1.0 - args.telemetry_overhead) * best["off"]:
+        failures.append(
+            f"telemetry overhead {out['overhead_frac']:.1%} exceeds the "
+            f"{args.telemetry_overhead:.0%} budget (best tokens/s "
+            f"on={best['on']:.1f} vs off={best['off']:.1f})")
+    if on["telemetry"]["trace_events"] == 0:
+        failures.append("tracing run recorded zero events — the gate "
+                        "measured nothing")
+    out["failures"] = failures
+    out["passed"] = not failures
+    print(f"[telemetry] overhead={out['overhead_frac']:+.1%} of "
+          f"{args.telemetry_overhead:.0%} budget (best tokens/s "
+          f"on={best['on']:.1f} off={best['off']:.1f}), "
+          f"events={on['telemetry']['trace_events']}, outputs identical: "
+          f"{outputs['on'] is not None and outputs['on'] == outputs['off']}")
+    for msg in failures:
+        print(f"[telemetry-gate] FAIL: {msg}")
+    if args.trace_out:
+        write_trace(args.trace_out, scheds["on"].telemetry.tracer)
+        print(f"[telemetry] trace written to {args.trace_out} "
+              f"(load in Perfetto / chrome://tracing)")
+    if args.metrics_out:
+        write_metrics(args.metrics_out, on)
+        print(f"[telemetry] metrics written to {args.metrics_out}")
+    del scheds
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
@@ -675,6 +758,24 @@ def main(argv=None):
                     help="shared header length for the --prefix trace")
     ap.add_argument("--prefix-requests", type=int, default=10,
                     help="requests in the --prefix trace")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="also replay the mixed-length paged trace with "
+                    "lifecycle tracing on vs off (losslessness + "
+                    "overhead measurement)")
+    ap.add_argument("--telemetry-gate", action="store_true",
+                    help="fail the run unless tracing is bitwise "
+                    "lossless, adds zero compile buckets, and costs "
+                    "<= --telemetry-overhead of untraced best-rep "
+                    "tokens/s (nightly gate)")
+    ap.add_argument("--telemetry-overhead", type=float, default=0.03,
+                    help="tokens/s fraction the traced run may lose to "
+                    "the untraced run before --telemetry-gate fails")
+    ap.add_argument("--trace-out", default="",
+                    help="write the tracing run's Perfetto/Chrome "
+                    "trace_event JSON here (with --telemetry[-gate])")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the tracing run's metrics snapshot as "
+                    "newline-JSON here (with --telemetry[-gate])")
     ap.add_argument("--trained", action="store_true",
                     help="use the cached 300-step smoke checkpoint "
                     "(realistic acceptance) instead of random init")
@@ -766,6 +867,9 @@ def main(argv=None):
     if args.slo or args.slo_gate:
         report["slo_compare"] = run_slo_compare(
             cfg, packed, cass, ecfg, args, rt_extra)
+    if args.telemetry or args.telemetry_gate:
+        report["telemetry_compare"] = run_telemetry_compare(
+            cfg, packed, cass, ecfg, args, rt_extra)
     byl = {(r["mode"], r["lambda"]): r for r in report["runs"]}
     for lam in rates:
         f, a, ar = (byl[("fused", lam)], byl[("alternating", lam)],
@@ -805,6 +909,8 @@ def main(argv=None):
     if args.swap_gate and not report["oversub_compare"]["passed"]:
         raise SystemExit(1)
     if args.slo_gate and not report["slo_compare"]["passed"]:
+        raise SystemExit(1)
+    if args.telemetry_gate and not report["telemetry_compare"]["passed"]:
         raise SystemExit(1)
     if args.fused_gate and failures:
         raise SystemExit(1)

@@ -91,6 +91,8 @@ from repro.models import init_params, forward_train
 from repro.models.layers import Runtime
 from repro.serving.engine import Engine, EngineConfig, validate_request_slos
 from repro.serving.scheduler import Scheduler
+from repro.serving.telemetry import (Telemetry, format_stats_lines,
+                                     write_metrics, write_trace)
 
 
 def run(argv=None):
@@ -189,6 +191,19 @@ def run(argv=None):
                     help="disable SLO-aware goodput scheduling: keep the "
                     "legacy priority-then-FIFO decision paths even when "
                     "requests declare SLOs (deadlines still reported)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace_event JSON of "
+                    "the run's request lifecycle (open in "
+                    "chrome://tracing or ui.perfetto.dev); enables the "
+                    "in-memory lifecycle tracer, which never touches "
+                    "device values — outputs are bitwise identical to "
+                    "a trace-off run")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the run's metrics snapshot as "
+                    "newline-delimited JSON (one metric per line)")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="lifecycle tracer ring bound (events); a full "
+                    "ring drops oldest events, never grows")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     # fail on malformed SLOs before paying for model init
@@ -251,6 +266,9 @@ def run(argv=None):
     if args.attn_chunk_k is not None:
         rt_extra["attn_chunk_k"] = args.attn_chunk_k
 
+    telem = Telemetry(trace=args.trace_out is not None,
+                      trace_capacity=args.trace_capacity)
+
     if args.scheduler:
         s_max = args.prompt_len + args.max_new + args.gamma + 1
         sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
@@ -267,7 +285,8 @@ def run(argv=None):
                           swap=args.swap,
                           swap_store_blocks=args.swap_store_blocks,
                           slo_aware=not args.fifo,
-                          attn_kernel=args.attn_kernel)
+                          attn_kernel=args.attn_kernel,
+                          telemetry=telem)
         t0 = time.perf_counter()
         for i in range(args.requests):
             # odd-numbered requests carry the per-request stop list; even
@@ -284,49 +303,21 @@ def run(argv=None):
         dt = time.perf_counter() - t0
         s = sched.summary()
         mode = "fused" if sched.fused else "alternating"
-        print(f"[sched:{mode}] {len(done)} reqs through {args.slots} "
-              f"slots, cycles={s['cycles']} "
-              f"(prefill={s['prefill_cycles']}, mixed={s['mixed_cycles']}), "
-              f"tokens/cycle={s['tokens_per_cycle']:.2f}, "
-              f"acceptance={s['acceptance']}, "
-              f"mean latency={s.get('mean_latency_cycles', 0):.1f} cycles, "
-              f"wall={dt:.1f}s")
-        print(f"[latency] ttft p50/p95="
-              f"{s.get('ttft_cycles_p50') or 0:.1f}/"
-              f"{s.get('ttft_cycles_p95') or 0:.1f} cycles, "
-              f"itl p50/p95={s.get('itl_cycles_p50') or 0:.1f}/"
-              f"{s.get('itl_cycles_p95') or 0:.1f} cycles")
-        if s["slo_finished"]:
-            cm = s["cost_model"]
-            print(f"[slo] deadline hits {s['slo_hits']}/"
-                  f"{s['slo_finished']} "
-                  f"(rate={s['slo_hit_rate']:.2f}), cost model: "
-                  f"cycle_ms={cm['cycle_ms']:.2f} "
-                  f"(warm={cm['warm']}), mode="
-                  f"{'fifo' if args.fifo else 'slo-aware'}")
-        if args.paged:
-            print(f"[paged] pool={s['pool_blocks']} blocks x "
-                  f"{s['block_size']} tok, high water="
-                  f"{s['pool_high_water_blocks']} blocks, peak resident="
-                  f"{s['peak_resident_tokens']} tok (reserved "
-                  f"{s['peak_reserved_tokens']})")
-        if args.swap:
-            print(f"[swap] preemptions={s['preemptions']} "
-                  f"(resumes={s['swap_resumes']}), spilled="
-                  f"{s['swap_out_blocks']} blocks out / "
-                  f"{s['swap_in_blocks']} restored / "
-                  f"{s['swap_matched_blocks']} re-aliased from the "
-                  f"prefix cache, peak swapped="
-                  f"{s['peak_swapped_tokens']} tok "
-                  f"({s['spill_peak_bytes'] / 1e6:.2f}MB host)")
-        if args.prefix_cache:
-            print(f"[prefix] hit rate={s['prefix_hit_rate']:.2f} "
-                  f"({s['prefix_hits']}/{s['prefix_queries']} admissions), "
-                  f"matched={s['prefix_matched_tokens']} tok, "
-                  f"aliased={s['prefix_blocks_aliased']} blocks, "
-                  f"cow={s['cow_copies']}, prefill computed="
-                  f"{s['prefill_tokens']} tok, parked now="
-                  f"{s['prefix_parked_blocks']} blocks")
+        # the ONE stats formatter: every section keys off the summary's
+        # subsystems config, so an enabled subsystem always prints (even
+        # with zero activity) and a missing key raises instead of
+        # silently formatting nothing
+        for line in format_stats_lines(s, mode=mode, wall_s=dt,
+                                       n_done=len(done), slots=args.slots):
+            print(line)
+        if args.trace_out:
+            write_trace(args.trace_out, sched.telemetry.tracer)
+            print(f"[telemetry] perfetto trace -> {args.trace_out} "
+                  f"({s['telemetry']['trace_events']} events, "
+                  f"{s['telemetry']['trace_dropped']} dropped)")
+        if args.metrics_out:
+            write_metrics(args.metrics_out, s)
+            print(f"[telemetry] metrics jsonl -> {args.metrics_out}")
         for r in sorted(done, key=lambda r: r.rid):
             print(f"  req {r.rid}: {len(r.output)} tokens, "
                   f"first {r.output[:8]}")
@@ -336,8 +327,15 @@ def run(argv=None):
     t0 = time.perf_counter()
     tokens, stats = eng.generate(prompt, max_new=args.max_new,
                                  key=jax.random.fold_in(key, 2),
-                                 speculative=args.variant != 0)
+                                 speculative=args.variant != 0,
+                                 telemetry=telem)
     dt = time.perf_counter() - t0
+    if args.trace_out:
+        write_trace(args.trace_out, telem.tracer)
+        print(f"[telemetry] perfetto trace -> {args.trace_out}")
+    if args.metrics_out:
+        write_metrics(args.metrics_out, telem.metrics.snapshot())
+        print(f"[telemetry] metrics jsonl -> {args.metrics_out}")
     print(f"[serve] {tokens.shape[0]} reqs, cycles={stats['cycles']}, "
           f"tokens/cycle={stats.get('tokens_per_cycle', 1.0):.2f}, "
           f"acceptance={stats['acceptance']}, wall={dt:.1f}s")

@@ -140,6 +140,18 @@ class BlockAllocator:
         (these tokens are admitted but hold zero pool capacity)."""
         return sum(self._swapped.values())
 
+    def occupancy(self) -> dict:
+        """Point-in-time occupancy gauges (host ints, one dict scan) —
+        the telemetry counter-track sample: how the pool's capacity is
+        split across live, parked, reserved and swapped-out state."""
+        return {"capacity": self.capacity,
+                "allocated": self.allocated_total,
+                "reserved": self.reserved_total,
+                "parked": self.parked_total,
+                "uncharged": self.uncharged_total,
+                "swapped_blocks": self.swapped_blocks_total,
+                "high_water": self.high_water}
+
     def refcount(self, blk: int) -> int:
         return self._refs.get(blk, 0)
 

@@ -104,6 +104,14 @@ class CostModel:
 
     # -- queries -----------------------------------------------------------
 
+    def __contains__(self, bucket: str) -> bool:
+        """A bucket exists once its FIRST observation lands — even while
+        warmup discard holds its fit at zero calls. The telemetry
+        regression gate leans on this: every compile bucket that ever
+        ran must be visible here and in ``bucket_wall_ms``, never only
+        in ``trace_counts``."""
+        return bucket in self.buckets
+
     @property
     def warm(self) -> bool:
         """True once any decode-cycle bucket has a measurement."""

@@ -543,10 +543,16 @@ class Engine:
         self._scatter = jax.jit(scatter_tokens, donate_argnums=(0,))
 
     def generate(self, batch: dict, max_new: int, key=None,
-                 speculative: bool = True):
+                 speculative: bool = True, telemetry=None):
         """Returns (tokens (B, max_new+γ+1) int32, -1 beyond each row's
-        output, every row holding ≥ max_new committed tokens), stats."""
+        output, every row holding ≥ max_new committed tokens), stats.
+
+        ``telemetry`` is an optional ``serving.telemetry.Telemetry``
+        bundle: per-cycle CYCLE events (γ proposed, k accepted) and the
+        cycle/accepted/drafted counters land there, fed only from the
+        host-side values this loop already harvests — no extra syncs."""
         import numpy as np
+        from repro.serving import telemetry as TM
         key = key if key is not None else jax.random.PRNGKey(0)
         b, s = batch["tokens"].shape
         pad = self.ecfg.gamma + 1
@@ -579,6 +585,15 @@ class Engine:
                 drafted += self.ecfg.gamma * int(active.sum())
                 cycles += 1
                 cur = res.next_token[:, None]
+                if telemetry is not None:
+                    for row in np.flatnonzero(active):
+                        telemetry.metrics.observe("acceptance_len",
+                                                  int(n[row]))
+                        telemetry.tracer.emit(
+                            TM.CYCLE, rid=int(row), slot=int(row),
+                            cycle=float(cycles),
+                            args=(self.ecfg.gamma, int(n[row]),
+                                  int(n[row]) + 1))
             else:
                 nxt, cache = self._auto(self.params, cache, cur, sub)
                 buf, count = self._scatter(buf, count, nxt[:, None],
@@ -586,6 +601,11 @@ class Engine:
                 committed += 1
                 cycles += 1
                 cur = nxt[:, None]
+                if telemetry is not None:
+                    for row in np.flatnonzero(active):
+                        telemetry.tracer.emit(
+                            TM.CYCLE, rid=int(row), slot=int(row),
+                            cycle=float(cycles), args=(0, 0, 1))
         # delivered tokens (device count, capped at the buffer) — fast rows
         # overshoot max_new while slow rows catch up, and those dropped
         # tokens must not inflate throughput; prefill-argmax token is not a
@@ -595,4 +615,10 @@ class Engine:
                  "tokens_per_cycle": float(delivered.mean() - 1)
                  / max(cycles, 1),
                  "acceptance": accepted / drafted if drafted else None}
+        if telemetry is not None:
+            telemetry.metrics.inc("cycles", cycles)
+            telemetry.metrics.inc("accepted", accepted)
+            telemetry.metrics.inc("drafted", drafted)
+            telemetry.metrics.inc("committed",
+                                  int(delivered.sum()) - b)
         return buf, stats

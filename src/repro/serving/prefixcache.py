@@ -130,6 +130,12 @@ class PrefixCache:
     def __len__(self) -> int:
         return len(self.by_block)
 
+    def snapshot(self) -> dict:
+        """Gauge view for the metrics registry: indexed blocks and how
+        many of them are parked (resident but evictable) right now."""
+        return {"prefix_cached_blocks": len(self),
+                "prefix_parked_blocks": self.alloc.parked_total}
+
     def _touch(self, node: PrefixNode) -> None:
         self._tick += 1
         node.last_use = self._tick

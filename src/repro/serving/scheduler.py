@@ -102,6 +102,8 @@ from repro.serving.engine import (EngineConfig, autoregressive_step,
                                   validate_serving_knobs)
 from repro.serving.prefixcache import PrefixCache, PrefixMatch
 from repro.serving.swapstore import SpillStore
+from repro.serving import telemetry as TM
+from repro.serving.telemetry import Telemetry
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 # preempted: swapped out to the host SpillStore, waiting to resume
@@ -261,7 +263,8 @@ class Scheduler:
                  swap_store_blocks: int | None = None,
                  slo_aware: bool = True,
                  attn_kernel: str = "off",
-                 debug_invariants: int | None = None):
+                 debug_invariants: int | None = None,
+                 telemetry: Telemetry | None = None):
         if cfg.frontend:
             raise NotImplementedError(
                 "scheduler admission is token-prompt only for now")
@@ -307,6 +310,17 @@ class Scheduler:
         # fed one observation per device step by _stamp_wall; persists
         # across reset() like the compiled steps it measures
         self.cost = CostModel()
+        # observability bundle (serving.telemetry): lifecycle tracer +
+        # metrics registry. The registry is the ONE keyed store serving
+        # numbers live in (``stats``/``step_walls`` are read-only views
+        # over it), and its wall observations feed the cost model
+        # through the same bucket keys — ``bucket_wall_ms`` and
+        # ``cost_model`` can no longer diverge. The tracer is fed only
+        # host-authoritative values (planner decisions, harvested numpy
+        # results, allocator transitions): telemetry on/off is bitwise
+        # identical serving with zero extra syncs or compiles.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.telemetry.bind_cost(self.cost)
         # run the cross-registry check_invariants() every N steps
         # (0 = off). Defaults from REPRO_DEBUG_INVARIANTS so the test
         # suite turns it on globally (tests/conftest.py) without every
@@ -381,20 +395,25 @@ class Scheduler:
         self.cur = np.zeros((self.num_slots, 1), np.int32)
         self.clock = 0.0                                # decode-cycle clock
         self.key = jax.random.PRNGKey(0)
-        self.stats = {"cycles": 0, "prefill_cycles": 0, "mixed_cycles": 0,
-                      "prefill_tokens": 0,
-                      "peak_prefill_tokens_per_cycle": 0, "committed": 0,
-                      "accepted": 0, "drafted": 0, "admitted": 0,
-                      "finished": 0, "peak_resident_tokens": 0,
-                      "peak_reserved_tokens": 0, "prefix_queries": 0,
-                      "prefix_hits": 0, "prefix_matched_tokens": 0,
-                      "prefix_blocks_aliased": 0, "cow_copies": 0,
-                      "preemptions": 0, "swap_resumes": 0,
-                      "swap_out_blocks": 0, "swap_in_blocks": 0,
-                      "swap_matched_blocks": 0, "peak_swapped_tokens": 0}
-        # measured per-bucket wall times (cost-model refresh seed):
-        # step name -> [calls, total seconds]; summary() reports means
-        self.step_walls: dict[str, list] = {}
+        # per-run observability state restarts with the run (ring +
+        # counters); the bound cost model and the trace on/off knob
+        # persist, like the compiled steps they describe
+        self.telemetry.reset()
+        self.tracer = self.telemetry.tracer
+        self.metrics = self.telemetry.metrics
+        # zero-init the full legacy counter set so every snapshot (and
+        # the ``stats`` view) carries every key from cycle 0
+        self.metrics.declare(
+            "cycles", "prefill_cycles", "mixed_cycles", "prefill_tokens",
+            "committed", "accepted", "drafted", "admitted", "finished",
+            "prefix_queries", "prefix_hits", "prefix_matched_tokens",
+            "prefix_blocks_aliased", "cow_copies", "preemptions",
+            "swap_resumes", "swap_out_blocks", "swap_in_blocks",
+            "swap_matched_blocks")
+        for peak in ("peak_prefill_tokens_per_cycle",
+                     "peak_resident_tokens", "peak_reserved_tokens",
+                     "peak_swapped_tokens"):
+            self.metrics.gauge(peak, 0)
         self._next_rid = 0
         self._next_swap_key = 0
         self._steps_since_check = 0
@@ -438,6 +457,17 @@ class Scheduler:
         # requests of the previous run were dropped with the queue)
         self.spill = SpillStore(self.swap_store_blocks) if self.swap \
             else None
+        # subsystem on/off flags: the formatter and exporters key off
+        # these, so a disabled subsystem reads as an explicit "off"
+        # rather than a silently-absent stats section
+        self.metrics.set_config("paged", self.paged)
+        self.metrics.set_config("prefix_cache", self.prefix is not None)
+        self.metrics.set_config("swap", self.swap)
+        self.metrics.set_config("slo_aware", self.slo_aware)
+        self.metrics.set_config("slo_declared", self._slo_seen)
+        self.metrics.set_config("attn_kernel", self.attn_kernel)
+        self.metrics.set_config("fused", self.fused)
+        self.metrics.set_config("speculative", self.speculative)
 
     def reset(self) -> None:
         """Clear queue/slots/stats for a fresh run reusing the compiled
@@ -448,6 +478,19 @@ class Scheduler:
         run still skips its prefill), while live rows are released so
         their private blocks return to the pool."""
         self._reset_state()
+
+    @property
+    def stats(self) -> dict:
+        """Legacy counter view: the registry's counters and gauges
+        merged flat, spelled exactly as the old ad-hoc dict. Read-only —
+        writers go through ``self.metrics``."""
+        return {**self.metrics.counters, **self.metrics.gauges}
+
+    @property
+    def step_walls(self) -> dict:
+        """Legacy wall view (``name -> [calls, total_seconds]``): the
+        registry's per-bucket wall store, live."""
+        return self.metrics.walls
 
     # -- queue -------------------------------------------------------------
 
@@ -503,7 +546,10 @@ class Scheduler:
         self._next_rid = req.rid + 1
         if req.has_slo:
             self._slo_seen = True
+            self.metrics.set_config("slo_declared", True)
         self.queue.append(req)
+        self.tracer.emit(TM.SUBMIT, rid=req.rid, cycle=self.clock,
+                         args=(len(tokens), max_new))
         return req
 
     @property
@@ -590,6 +636,8 @@ class Scheduler:
             # speclint: disable=sync-block(stamp the restore, not its dispatch)
             jax.block_until_ready(self.cache["length"])
             self._stamp_wall("restore", t0)
+            self.tracer.emit(TM.RESTORE, rid=req.rid, slot=slot,
+                             cycle=self.clock, args=(restore_n,))
         self.row_blocks[slot] = blocks
         self.row_index[slot] = (nodes[-1] if nodes else None, matched)
         if blocks:
@@ -599,9 +647,11 @@ class Scheduler:
         req.pos = chain.pos
         self.spill.pop(req.swap_key)
         req.swap_key = None
-        self.stats["swap_resumes"] += 1
-        self.stats["swap_in_blocks"] += restore_n
-        self.stats["swap_matched_blocks"] += matched
+        self.metrics.inc("swap_resumes")
+        self.metrics.inc("swap_in_blocks", restore_n)
+        self.metrics.inc("swap_matched_blocks", matched)
+        self.tracer.emit(TM.RESUME, rid=req.rid, slot=slot,
+                         cycle=self.clock, args=(matched, restore_n))
 
     def _admit(self, req: Request, slot: int,
                plan: tuple[int, PrefixMatch | None, int] | None) -> None:
@@ -622,12 +672,12 @@ class Scheduler:
             self.table[slot, :] = TRASH_BLOCK
             blocks: list[int] = []
             if m is not None:
-                self.stats["prefix_queries"] += 1
+                self.metrics.inc("prefix_queries")
                 for node in m.nodes:
                     self.pool.share(slot, node.block)
                     blocks.append(node.block)
                 matched = m.full_tokens
-                self.stats["prefix_blocks_aliased"] += len(m.nodes)
+                self.metrics.inc("prefix_blocks_aliased", len(m.nodes))
                 if m.partial is not None and m.partial_len > 0:
                     # diverges inside a cached block: pin the source for
                     # the row's lifetime (it must survive until the copy
@@ -637,10 +687,11 @@ class Scheduler:
                     self._pending_cow.append((m.partial.block, dst))
                     blocks.append(dst)
                     matched += m.partial_len
-                    self.stats["cow_copies"] += 1
+                    self.metrics.inc("cow_copies")
                 if matched:
-                    self.stats["prefix_hits"] += 1
-                    self.stats["prefix_matched_tokens"] += matched
+                    self.metrics.inc("prefix_hits")
+                    self.metrics.inc("prefix_matched_tokens", matched)
+                self.metrics.observe("prefix_hit_depth", matched)
                 # seed the row past the matched tokens: prefill starts
                 # mid-prompt, and a full-prefix hit rides one decode-width
                 # cycle (TTFT ~ 1 cycle) instead of re-prefilling
@@ -655,7 +706,9 @@ class Scheduler:
                     m.nodes[-1] if m.nodes else None, len(m.nodes))
             if blocks:
                 self.table[slot, :len(blocks)] = blocks
-        self.stats["admitted"] += 1
+        self.metrics.inc("admitted")
+        self.tracer.emit(TM.ADMIT, rid=req.rid, slot=slot,
+                         cycle=self.clock, args=(req.prefix_matched,))
 
     # -- SLO goodput model ---------------------------------------------------
 
@@ -791,10 +844,14 @@ class Scheduler:
         key = ("swap", self._next_swap_key)
         self._next_swap_key += 1
         t0 = time.perf_counter()
+        bytes_before = self.spill.nbytes
         data = self._spill(self.cache, jnp.asarray(vec))
         self.spill.put(key, data, n_res, length=int(self.lengths[slot]),
                        pos=victim.pos, cur=int(self.cur[slot, 0]))
         self._stamp_wall("spill", t0)
+        self.tracer.emit(TM.SPILL, rid=victim.rid, slot=slot,
+                         cycle=self.clock,
+                         args=(n_res, self.spill.nbytes - bytes_before))
         self.pool.swap_out(slot, key, n_res)
         self.table[slot, :] = TRASH_BLOCK
         self.row_blocks[slot] = []
@@ -804,8 +861,10 @@ class Scheduler:
         victim.state, victim.slot, victim.swap_key = SWAPPED, -1, key
         victim.preemptions += 1
         self.queue.appendleft(victim)
-        self.stats["preemptions"] += 1
-        self.stats["swap_out_blocks"] += n_res
+        self.metrics.inc("preemptions")
+        self.metrics.inc("swap_out_blocks", n_res)
+        self.tracer.emit(TM.PREEMPT, rid=victim.rid, slot=slot,
+                         cycle=self.clock, args=(n_res,))
 
     def _plan_for(self, req: Request):
         """The request's admission plan — resume-shaped for a SWAPPED
@@ -943,6 +1002,8 @@ class Scheduler:
         req.token_cycles = req.token_cycles[:len(req.output)]
         req.token_walls = req.token_walls[:len(req.output)]
         req.state, req.finished_at = FINISHED, self.clock
+        self.tracer.emit(TM.RETIRE, rid=req.rid, slot=req.slot,
+                         cycle=self.clock, args=(len(req.output),))
         self.slots[req.slot] = None
         if self.paged:
             # refcounted release: blocks shared with other rows stay live,
@@ -952,20 +1013,19 @@ class Scheduler:
             self.row_blocks[req.slot] = []
             self.table[req.slot, :] = TRASH_BLOCK
         self.finished.append(req)
-        self.stats["finished"] += 1
+        self.metrics.inc("finished")
 
     def _stamp_wall(self, name: str, t0: float) -> None:
-        """Fold one device-step invocation's wall time into the per-bucket
-        stats (``trace_counts``-style, keyed by the same step names) and
-        the online cost model — the per-bucket fit refreshes as cycles
-        retire. Intervals are taken off ``time.perf_counter()`` (the
-        monotonic clock): an NTP step across ``time.time()`` would make
+        """Fold one device-step invocation's wall time into the registry
+        (``observe_wall`` feeds the ``bucket_wall_ms`` view and the
+        online cost model through the SAME bucket key — the per-bucket
+        fit refreshes as cycles retire) and emit a STEP trace event.
+        Intervals are taken off ``time.perf_counter()`` (the monotonic
+        clock): an NTP step across ``time.time()`` would make
         ``bucket_wall_ms`` negative and poison the cost model."""
         dt = time.perf_counter() - t0
-        w = self.step_walls.setdefault(name, [0, 0.0])
-        w[0] += 1
-        w[1] += dt
-        self.cost.observe(name, dt * 1e3)
+        self.metrics.observe_wall(name, dt)
+        self.tracer.emit(TM.STEP, cycle=self.clock, args=(name, dt * 1e3))
 
     def _record_tokens(self, req: Request, k: int) -> None:
         """Stamp ``k`` just-committed tokens with this cycle's end time.
@@ -989,9 +1049,18 @@ class Scheduler:
         self._record_tokens(req, len(req.output) - before)
         self.lengths[slot] += int(n[slot]) + 1
         self.cur[slot, 0] = nxt[slot]
+        if self.speculative:
+            # per-cycle acceptance-length histogram: THE control input
+            # every adaptive-γ method hangs off (k ∈ [0, γ])
+            self.metrics.observe("acceptance_len", int(n[slot]))
         self._maybe_retire(req)
         # delivered tokens only: retirement truncates past stops/max_new
-        self.stats["committed"] += len(req.output) - before
+        delivered = len(req.output) - before
+        self.metrics.inc("committed", delivered)
+        self.tracer.emit(TM.CYCLE, rid=req.rid, slot=slot,
+                         cycle=self.clock,
+                         args=(self.ecfg.gamma if self.speculative else 0,
+                               int(n[slot]), delivered))
 
     def _fast_forward(self) -> bool:
         """No resident work: jump the clock to the next queued arrival
@@ -1027,8 +1096,14 @@ class Scheduler:
             dst = np.full(k, TRASH_BLOCK, np.int32)
             for i, (s, d) in enumerate(batch):
                 src[i], dst[i] = s, d
+            t0 = time.perf_counter()
             self.cache = self._cow(self.cache, jnp.asarray(src),
                                    jnp.asarray(dst))
+            # dispatch-only stamp (no block_until_ready — CoW stays
+            # zero-sync): "cow" appears in bucket_wall_ms/cost_model
+            # whenever it appears in trace_counts, closing the
+            # divergent-bucket-keys hole summary() used to have
+            self._stamp_wall("cow", t0)
 
     def _index_prefix(self, req: Request) -> None:
         """Register the row's newly-committed full prompt blocks in the
@@ -1054,8 +1129,7 @@ class Scheduler:
     def _track_residency(self) -> None:
         resident = int(sum(self.lengths[r.slot] for r in self.slots
                            if r is not None))
-        self.stats["peak_resident_tokens"] = max(
-            self.stats["peak_resident_tokens"], resident)
+        self.metrics.gauge_max("peak_resident_tokens", resident)
         if self.paged:
             # reserved (not merely allocated) blocks are the honest
             # memory-held figure: a reservation is unusable by anyone
@@ -1066,15 +1140,24 @@ class Scheduler:
                         + self.pool.uncharged_total) * self.block_size
         else:
             reserved = sum(r is not None for r in self.slots) * self.s_max
-        self.stats["peak_reserved_tokens"] = max(
-            self.stats["peak_reserved_tokens"], reserved)
+        self.metrics.gauge_max("peak_reserved_tokens", reserved)
         if self.paged and self.swap:
             # honest accounting for oversubscription: swapped rows hold
             # ZERO device blocks — their tokens live host-side and are
             # reported separately, never netted against pool residency
-            self.stats["peak_swapped_tokens"] = max(
-                self.stats["peak_swapped_tokens"],
+            self.metrics.gauge_max(
+                "peak_swapped_tokens",
                 self.pool.swapped_blocks_total * self.block_size)
+        if self.tracer.enabled:
+            # counter-track sample for the Perfetto export — host ints
+            # off the allocator's dict sizes, zero device traffic
+            occ = self.pool.occupancy() if self.paged else None
+            self.tracer.emit(TM.COUNTERS, cycle=self.clock, args=(
+                resident,
+                occ["allocated"] if occ else 0,
+                occ["parked"] if occ else 0,
+                occ["swapped_blocks"] if occ else 0,
+                len(self.queue)))
 
     # -- prefill -----------------------------------------------------------
 
@@ -1097,13 +1180,16 @@ class Scheduler:
         last = jax.device_get(last)
         self._stamp_wall("chunk", t0)
         for r in prefilling:
-            r.pos += int(valid[r.slot])
-            self.lengths[r.slot] += int(valid[r.slot])
-            self.stats["prefill_tokens"] += int(valid[r.slot])
+            v = int(valid[r.slot])
+            r.pos += v
+            self.lengths[r.slot] += v
+            self.metrics.inc("prefill_tokens", v)
+            self.tracer.emit(TM.PREFILL_CHUNK, rid=r.rid, slot=r.slot,
+                             cycle=self.clock, args=(v, r.pos))
             self._index_prefix(r)
             if r.pos >= len(r.tokens):
                 self._finish_prefill(r, last[r.slot])
-        self.stats["prefill_cycles"] += 1
+        self.metrics.inc("prefill_cycles")
 
     def _finish_prefill(self, req: Request, last_logits: np.ndarray) -> None:
         """Prompt exhausted: its last-position logits yield the first
@@ -1219,7 +1305,7 @@ class Scheduler:
             self._prefill_cycle([r for r in self.slots
                                  if r is not None and not r.prefill_done])
             self._track_residency()
-            self.stats["cycles"] += 1
+            self.metrics.inc("cycles")
             self.clock += 1.0
             return True
         if self.paged:
@@ -1247,15 +1333,16 @@ class Scheduler:
                 v = int(plan.prefill_valid[r.slot])
                 r.pos += v
                 self.lengths[r.slot] += v
-                self.stats["prefill_tokens"] += v
+                self.metrics.inc("prefill_tokens", v)
+                self.tracer.emit(TM.PREFILL_CHUNK, rid=r.rid, slot=r.slot,
+                                 cycle=self.clock, args=(v, r.pos))
                 self._index_prefix(r)
                 if r.pos >= len(r.tokens):
                     self._finish_prefill(r, last[r.slot])
-            self.stats["prefill_cycles"] += 1
-            self.stats["mixed_cycles"] += 1
-            self.stats["peak_prefill_tokens_per_cycle"] = max(
-                self.stats["peak_prefill_tokens_per_cycle"],
-                int(plan.prefill_valid.sum()))
+            self.metrics.inc("prefill_cycles")
+            self.metrics.inc("mixed_cycles")
+            self.metrics.gauge_max("peak_prefill_tokens_per_cycle",
+                                   int(plan.prefill_valid.sum()))
         # harvest decode rows — ONE batched transfer for the cycle's
         # results, not four implicit per-array syncs
         if plan.decoding:
@@ -1264,10 +1351,10 @@ class Scheduler:
             for r in plan.decoding:
                 self._harvest_decode_row(r, tokens, valid, n, nxt)
             dmask = plan.decode_mask
-            self.stats["accepted"] += int(n[dmask].sum())
-            self.stats["drafted"] += self.ecfg.gamma * int(dmask.sum())
+            self.metrics.inc("accepted", int(n[dmask].sum()))
+            self.metrics.inc("drafted", self.ecfg.gamma * int(dmask.sum()))
         self._track_residency()
-        self.stats["cycles"] += 1
+        self.metrics.inc("cycles")
         self.clock += 1.0
         return True
 
@@ -1316,7 +1403,7 @@ class Scheduler:
         if prefilling:
             self._prefill_cycle(prefilling)
             self._track_residency()
-            self.stats["cycles"] += 1
+            self.metrics.inc("cycles")
             self.clock += 1.0
             return True
         active = np.array([r is not None for r in self.slots])
@@ -1337,8 +1424,8 @@ class Scheduler:
                                          sub, act)
             tokens, valid, n, nxt = jax.device_get(
                 (res.tokens, res.valid, res.n_accepted, res.next_token))
-            self.stats["accepted"] += int(n[active].sum())
-            self.stats["drafted"] += self.ecfg.gamma * int(active.sum())
+            self.metrics.inc("accepted", int(n[active].sum()))
+            self.metrics.inc("drafted", self.ecfg.gamma * int(active.sum()))
             self._stamp_wall("spec", t0)
         else:
             nxt_dev, self.cache = self._auto(self.params, self.cache, cur,
@@ -1352,7 +1439,7 @@ class Scheduler:
             self._harvest_decode_row(self.slots[slot], tokens, valid, n,
                                      nxt)
         self._track_residency()
-        self.stats["cycles"] += 1
+        self.metrics.inc("cycles")
         self.clock += 1.0
         return True
 
@@ -1429,38 +1516,32 @@ class Scheduler:
                 "slo_hit_rate": hits / len(slo) if slo else None}
 
     def summary(self) -> dict:
-        s = dict(self.stats)
-        s["tokens_per_cycle"] = s["committed"] / max(s["cycles"], 1)
-        s["acceptance"] = (s["accepted"] / s["drafted"]
-                           if s["drafted"] else None)
+        """One-stop run report, sourced from the metrics registry: the
+        full counter/gauge set (legacy spellings), derived ratios,
+        per-bucket wall means next to the cost model (same keys by
+        construction — both views come off ``observe_wall``), latency
+        and goodput percentiles, compile ``trace_counts`` and the
+        tracer's own health (events kept/dropped)."""
+        m = self.metrics
+        if self.paged:
+            m.gauge("pool_blocks", self.pool.capacity)
+            m.gauge("pool_high_water_blocks", self.pool.high_water)
+            m.gauge("block_size", self.block_size)
+        if self.prefix is not None:
+            for k, v in self.prefix.snapshot().items():
+                m.gauge(k, v)
+        if self.swap:
+            m.gauge("swapped_now", self.pool.swapped_total)
+            for k, v in self.spill.snapshot().items():
+                m.gauge(k, v)
+        s = m.snapshot()
         if self.finished:
             lat = [r.finished_at - r.arrival for r in self.finished]
             s["mean_latency_cycles"] = float(np.mean(lat))
         s.update(self.latency_summary())
         s.update(self.goodput_summary())
-        if self.paged:
-            s["pool_blocks"] = self.pool.capacity
-            s["pool_high_water_blocks"] = self.pool.high_water
-            s["block_size"] = self.block_size
-        if self.prefix is not None:
-            s["prefix_hit_rate"] = (s["prefix_hits"]
-                                    / max(s["prefix_queries"], 1))
-            s["prefix_cached_blocks"] = len(self.prefix)
-            s["prefix_parked_blocks"] = self.pool.parked_total
-        if self.swap:
-            s["swapped_now"] = self.pool.swapped_total
-            s["spill_peak_blocks"] = self.spill.peak_blocks
-            s["spill_peak_bytes"] = self.spill.peak_bytes
-            s["spill_held_bytes"] = self.spill.nbytes
-        # measured per-bucket wall times (cost-model refresh seed): what
-        # one invocation of each compiled step actually costs, next to
-        # the cycle-unit token-cost model the planner reasons in
-        s["bucket_wall_ms"] = {
-            name: {"calls": calls, "total_ms": total * 1e3,
-                   "mean_ms": total * 1e3 / max(calls, 1)}
-            for name, (calls, total) in sorted(self.step_walls.items())}
-        # the online cost model the SLO planner trades in (persists
-        # across reset, unlike step_walls): per-bucket measured means
-        # plus the cycle<->ms exchange rate
-        s["cost_model"] = self.cost.snapshot()
+        s["trace_counts"] = dict(self.trace_counts)
+        s["telemetry"] = {"trace_enabled": self.tracer.enabled,
+                          "trace_events": len(self.tracer.ring),
+                          "trace_dropped": self.tracer.dropped}
         return s

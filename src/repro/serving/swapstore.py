@@ -112,6 +112,16 @@ class SpillStore:
     def nbytes(self) -> int:
         return sum(c.nbytes for c in self._chains.values())
 
+    def snapshot(self) -> dict:
+        """Gauge view for the metrics registry, spelled exactly as the
+        serving summary always reported it (``spill_*``)."""
+        return {"spill_peak_blocks": self.peak_blocks,
+                "spill_peak_bytes": self.peak_bytes,
+                "spill_held_blocks": self.blocks,
+                "spill_held_bytes": self.nbytes,
+                "spill_total_spilled_blocks": self.total_spilled_blocks,
+                "spill_total_restored_blocks": self.total_restored_blocks}
+
     def can_hold(self, n_blocks: int) -> bool:
         """Victim-policy gate: would a chain of ``n_blocks`` fit?"""
         if self.max_blocks is None:

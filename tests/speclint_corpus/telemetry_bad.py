@@ -1,0 +1,17 @@
+"""Seeded TRUE POSITIVES for the telemetry-sink host-sync rule.
+
+Tracer/metrics emit APIs append their arguments to host-authoritative
+state (the event ring, counter dicts). Feeding them a jit-traced value
+defers a device sync to export time — flagged as ``sync-item`` on the
+call line. Lint corpus, not runnable code.
+"""
+
+
+class Sched:
+    def harvest(self, params):
+        res = self._spec(params, self.cache)
+        self.tracer.emit("cycle", args=(3, res.n_accepted))  # [expect] sync-item
+        self.metrics.inc("committed", res.tokens)            # [expect] sync-item
+        self.metrics.observe("acceptance_len", res.n_accepted)  # [expect] sync-item
+        self.metrics.gauge("queue_depth", res.depth)         # [expect] sync-item
+        return res

@@ -1,0 +1,15 @@
+"""CLEAN-PASS corpus for the telemetry-sink rule: the sanctioned
+pattern — harvest through the cycle's one ``jax.device_get``, then feed
+telemetry host scalars only."""
+import jax
+
+
+class Sched:
+    def harvest(self, params):
+        res = self._spec(params, self.cache)
+        tokens, n = jax.device_get((res.tokens, res.n_accepted))
+        self.tracer.emit("cycle", args=(3, int(n)))   # host int: fine
+        self.metrics.inc("committed", int(n) + 1)
+        self.metrics.observe("acceptance_len", int(n))
+        self.metrics.gauge("queue_depth", len(self.queue))
+        return tokens

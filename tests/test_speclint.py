@@ -57,6 +57,17 @@ def test_hostsync_clean_pass():
     assert _lint("sync_good.py").clean
 
 
+def test_telemetry_sink_true_positives():
+    report = _lint("telemetry_bad.py")
+    assert _found(report) == _expected(CORPUS / "telemetry_bad.py")
+    assert {f.rule for f in report.findings} == {"sync-item"}
+    assert any("telemetry" in f.message for f in report.findings)
+
+
+def test_telemetry_sink_clean_pass():
+    assert _lint("telemetry_good.py").clean
+
+
 def test_recompile_true_positives():
     report = _lint("recompile_bad.py")
     assert _found(report) == _expected(CORPUS / "recompile_bad.py")

@@ -76,6 +76,14 @@ class Config:
         "decode_spec_pool"})
     # the only ``self.`` attributes allowed to hold device arrays
     device_self_attrs: frozenset = frozenset({"cache", "key"})
+    # telemetry record sinks (tracer/metrics emit APIs). These append to
+    # host-authoritative state (the event ring, counter dicts) on the
+    # serving hot path, so a traced argument is a deferred device sync:
+    # it blocks the moment the ring is exported or the counter is read.
+    # A call whose LAST dotted attribute is one of these with any
+    # jit-traced argument flags as ``sync-item``.
+    telemetry_sink_attrs: frozenset = frozenset({
+        "emit", "inc", "gauge", "gauge_max", "observe", "observe_wall"})
     # calls that move a traced value to host explicitly (sanctioned)
     sanctioned_transfers: frozenset = frozenset({
         "jax.device_get", "jax.experimental.multihost_utils"})

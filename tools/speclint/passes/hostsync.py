@@ -31,11 +31,34 @@ class _HostSync(TaintVisitor):
         self.findings.append(
             make_finding(self.path, node, rule, message, self.lines))
 
+    @staticmethod
+    def _flat_args(node: ast.Call):
+        """Every argument expression, descending into tuple/list
+        literals (the tracer packs event payloads as ``args=(...)``)."""
+        stack = list(node.args) + [kw.value for kw in node.keywords]
+        while stack:
+            e = stack.pop()
+            if isinstance(e, (ast.Tuple, ast.List)):
+                stack.extend(e.elts)
+            else:
+                yield e
+
     def on_call(self, node: ast.Call) -> None:
         d = dotted(node.func)
         if not d:
             return
         parts = d.split(".")
+        if parts[-1] in self.cfg.telemetry_sink_attrs and len(parts) > 1:
+            # telemetry sinks persist their arguments into host state
+            # (event ring / counter dicts); a traced argument is a sync
+            # deferred to export time — same budget violation as .item()
+            for arg in self._flat_args(node):
+                if self.classify(arg) == TRACED:
+                    self._flag(node, "sync-item",
+                               f"{d}() records a traced value — "
+                               "device_get before feeding telemetry")
+                    break
+            return
         if parts[-1] == "item" and len(parts) > 1:
             if self.classify(node.func.value) == TRACED:
                 self._flag(node, "sync-item",
