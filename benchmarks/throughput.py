@@ -38,6 +38,17 @@ least one preemption fires, the queue head's TTFT beats the
 no-preemption wait, host-spilled bytes are honestly reported, and every
 jit step (spill/restore included) compiles exactly once.
 
+``--overlap-gate`` (nightly CI) replays the oversubscription trace with
+the pipelined dispatch/harvest overlap on: the preempting (swap) run's
+best-rep tokens/s must land within 5% of the never-preempted run on the
+SAME tight pool (the queue head waits instead of preempting — equal
+capacity, so the comparison isolates the preemption machinery's cost,
+which double-buffered spill/restore makes ~free), the run must measure
+a positive overlap ratio (``unified.overlap`` present in
+``bucket_wall_ms``), outputs must be bitwise identical to both the
+big-pool reference and a ``--no-overlap`` synchronous replay, and every
+jit step must still compile exactly once.
+
 ``--slo`` replays a Poisson-arrival mixed-SLO trace (long deadline-free
 background generations saturating the slots + interactive requests with
 TTFT deadlines and ITL targets arriving at rate ``--slo-rate``) through
@@ -168,7 +179,7 @@ def run_paged_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
         sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
                           num_slots=args.slots, s_max=s_max,
                           rt_extra=rt_extra, paged=mode == "paged",
-                          block_size=block)
+                          block_size=block, overlap=not args.no_overlap)
         reqs = [sched.submit(p, max_new=args.max_new, arrival=i / 4.0)
                 for i, p in enumerate(prompts)]
         t0 = time.perf_counter()
@@ -247,7 +258,8 @@ def run_prefix_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
         sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
                           num_slots=args.slots, s_max=s_max,
                           rt_extra=rt_extra, paged=True, block_size=block,
-                          chunk_size=block, prefix_cache=mode == "on")
+                          chunk_size=block, prefix_cache=mode == "on",
+                          overlap=not args.no_overlap)
         reqs = [sched.submit(p, max_new=args.max_new, arrival=4.0 * i)
                 for i, p in enumerate(prompts)]
         t0 = time.perf_counter()
@@ -361,7 +373,7 @@ def run_oversub_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
                           num_slots=args.slots, s_max=s_max,
                           rt_extra=rt_extra, paged=True, block_size=block,
                           chunk_size=block, num_blocks=num_blocks,
-                          swap=swap)
+                          swap=swap, overlap=not args.no_overlap)
         reqs = [sched.submit(p, max_new=mn, arrival=a, priority=pr)
                 for p, mn, a, pr in zip(prompts, max_news, arrivals,
                                         prios)]
@@ -435,6 +447,158 @@ def run_oversub_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     return out
 
 
+def run_overlap_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
+    """Oversubscription trace with the pipelined overlap on: preemption
+    must cost ~nothing.
+
+    Same trace shape as ``run_oversub_compare`` (long background rows,
+    late short interactive arrivals, ``block == chunk == γ+1``). Four
+    schedulers:
+
+    * **big** — pool above peak residency, overlap ON: the bitwise
+      reference outputs + the peak measurement that sizes the tight pool
+    * **tight** — the tight pool, swap OFF, overlap ON: the
+      never-preempted run at the same capacity (the queue head waits
+      behind the slowest resident) — the throughput baseline, so the
+      gate prices the preemption machinery, not the smaller pool
+    * **overlap** — the tight pool + swap, overlap ON: preemptions fire
+      but the spill/restore copies double-buffer against the adjacent
+      fused steps, so throughput must stay within
+      ``--overlap-tolerance`` (default 5%) of the tight run
+    * **sync** — the tight pool + swap with ``overlap=False``: the
+      synchronous path the pipeline is pinned against, bitwise
+
+    Each overlap-on configuration replays the trace ``reps`` times and
+    the throughput gate compares best reps (wall noise on shared
+    runners, same policy as the telemetry gate). Recompiles count across
+    all reps, so the zero-recompile check also proves the deferred
+    harvest added no compile buckets."""
+    gamma = args.gamma
+    block = gamma + 1
+    key = jax.random.PRNGKey(args.seed + 4)     # the oversub trace shape
+    n_long, n_short = 2, max(args.oversub_requests - 2, 2)
+    # longer background rows than --oversub: the spill/restore round
+    # trip is a fixed cost (a handful of cycles), so the gate needs
+    # enough committed tokens behind it to price the *machinery*, not
+    # the trace being tiny
+    long_new = 6 * args.max_new
+    prompts, max_news, arrivals, prios = [], [], [], []
+    for i in range(n_long):
+        prompts.append(jax.device_get(jax.random.randint(
+            jax.random.fold_in(key, i), (2 * block,), 0, cfg.vocab_size)))
+        max_news.append(long_new)
+        arrivals.append(0.0)
+        prios.append(0)
+    for i in range(n_short):
+        prompts.append(jax.device_get(jax.random.randint(
+            jax.random.fold_in(key, 100 + i), (2 * block,), 0,
+            cfg.vocab_size)))
+        max_news.append(args.max_new)
+        arrivals.append(4.0 + 3.0 * i)
+        prios.append(1)
+    s_max = 2 * block + long_new + gamma + 1
+    s_max += (-s_max) % block
+
+    def replay(num_blocks, swap, overlap, reps):
+        sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
+                          num_slots=args.slots, s_max=s_max,
+                          rt_extra=rt_extra, paged=True, block_size=block,
+                          chunk_size=block, num_blocks=num_blocks,
+                          swap=swap, overlap=overlap)
+        best, outs_ref, identical = None, None, True
+        for _ in range(reps):
+            sched.reset()
+            reqs = [sched.submit(p, max_new=mn, arrival=a, priority=pr)
+                    for p, mn, a, pr in zip(prompts, max_news, arrivals,
+                                            prios)]
+            t0 = time.perf_counter()
+            sched.run()
+            dt = time.perf_counter() - t0
+            s = sched.summary()
+            s["wall_s"] = dt
+            s["tokens_per_s"] = s["committed"] / max(dt, 1e-9)
+            s["num_blocks"] = num_blocks
+            outs = [r.output for r in reqs]
+            if outs_ref is None:
+                outs_ref = outs
+            elif outs != outs_ref:
+                identical = False   # nondeterminism — fails the gate
+            if best is None or s["tokens_per_s"] > best["tokens_per_s"]:
+                best = s
+        del sched
+        return best, outs_ref, identical
+
+    from repro.serving.blockpool import blocks_needed
+    per_req = blocks_needed(2 * block + long_new + gamma + 1, block)
+    big_blocks = args.slots * blocks_needed(s_max, block) + 1
+    reps = 3
+    big, big_outs, big_det = replay(big_blocks, swap=False, overlap=True,
+                                    reps=1)
+    tight_blocks = max(int(big["pool_high_water_blocks"]
+                           * args.oversub_frac), per_req) + 1
+    tight, _tight_outs, tight_det = replay(tight_blocks, swap=False,
+                                           overlap=True, reps=reps)
+    over, over_outs, over_det = replay(tight_blocks, swap=True,
+                                       overlap=True, reps=reps)
+    sync, sync_outs, _ = replay(tight_blocks, swap=True, overlap=False,
+                                reps=1)
+    out = {"block_size": block, "requests": len(prompts), "reps": reps,
+           "tolerance": args.overlap_tolerance,
+           "big_pool_blocks": big_blocks,
+           "tight_pool_blocks": tight_blocks,
+           "runs": {"big": big, "tight": tight, "overlap": over,
+                    "sync": sync}}
+    out["outputs_identical"] = over_outs == big_outs
+    out["sync_outputs_identical"] = sync_outs == over_outs
+    out["throughput_frac"] = (over["tokens_per_s"]
+                              / max(tight["tokens_per_s"], 1e-9))
+    out["overlap_ratio"] = over.get("overlap_ratio")
+    print(f"[overlap] preempting tokens/s="
+          f"{over['tokens_per_s']:.1f} vs never-preempted "
+          f"{tight['tokens_per_s']:.1f} on the same tight pool "
+          f"({out['throughput_frac']:.1%}), "
+          f"preemptions={over['preemptions']}, overlap ratio="
+          f"{out['overlap_ratio'] if out['overlap_ratio'] is None else format(out['overlap_ratio'], '.2f')}"
+          f" (outputs identical: big={out['outputs_identical']}, "
+          f"sync={out['sync_outputs_identical']})")
+    failures = []
+    if not out["outputs_identical"]:
+        failures.append("pipelined preempt-then-resume is not lossless: "
+                        "overlap-run outputs differ from the big-pool run")
+    if not out["sync_outputs_identical"]:
+        failures.append("overlap changed tokens: pipelined outputs "
+                        "differ from the --no-overlap synchronous replay")
+    if not (tight_det and over_det):
+        failures.append("outputs differed between reps of the same "
+                        "configuration — the pipeline is nondeterministic")
+    if over["preemptions"] < 1:
+        failures.append("the oversubscribed trace never preempted — the "
+                        "tight pool is not actually oversubscribed")
+    if out["throughput_frac"] < 1.0 - args.overlap_tolerance:
+        failures.append(
+            f"preempting throughput {over['tokens_per_s']:.1f} tok/s "
+            f"fell {1 - out['throughput_frac']:.1%} below the "
+            f"never-preempted same-pool run's {tight['tokens_per_s']:.1f} "
+            f"(> {args.overlap_tolerance:.0%} tolerance) — preemption "
+            "is not overlap-free")
+    if "unified.overlap" not in over["bucket_wall_ms"]:
+        failures.append("no 'unified.overlap' wall bucket — the deferred "
+                        "harvest never measured overlapped device time")
+    if not (out["overlap_ratio"] and out["overlap_ratio"] > 0):
+        failures.append(
+            f"measured overlap ratio {out['overlap_ratio']} is not > 0 — "
+            "the pipeline never hid device time behind host work")
+    for name, cnt in over["trace_counts"].items():
+        if cnt > 1:
+            failures.append(f"overlap run traced step '{name}' {cnt}x — "
+                            "zero-recompile contract broken")
+    out["failures"] = failures
+    out["passed"] = not failures
+    for msg in failures:
+        print(f"[overlap-gate] FAIL: {msg}")
+    return out
+
+
 def run_slo_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     """Poisson-arrival mixed-SLO trace: FIFO vs SLO-aware goodput.
 
@@ -501,7 +665,8 @@ def run_slo_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
     sched = Scheduler(cfg, params, cass=cass, ecfg=ecfg,
                       num_slots=slots, s_max=s_max, rt_extra=rt_extra,
                       paged=True, block_size=block, chunk_size=block,
-                      num_blocks=num_blocks, swap=True)
+                      num_blocks=num_blocks, swap=True,
+                      overlap=not args.no_overlap)
     # warmup: trace the chunk + unified buckets and seed the cost
     # model's cycle<->ms exchange rate with real measurements, so the
     # ms deadlines below correspond to the intended cycle budgets
@@ -621,11 +786,13 @@ def run_telemetry_compare(cfg, params, cass, ecfg, args, rt_extra) -> dict:
                          num_slots=args.slots, s_max=s_max,
                          rt_extra=rt_extra, paged=True,
                          block_size=args.block_size,
+                         overlap=not args.no_overlap,
                          telemetry=Telemetry(trace=False)),
         "on": Scheduler(cfg, params, cass=cass, ecfg=ecfg,
                         num_slots=args.slots, s_max=s_max,
                         rt_extra=rt_extra, paged=True,
                         block_size=args.block_size,
+                        overlap=not args.no_overlap,
                         telemetry=Telemetry(trace=True)),
     }
     reps = 3
@@ -726,6 +893,23 @@ def main(argv=None):
                     "preemption fires, the queue head's TTFT beats the "
                     "no-preemption wait, swapped bytes are reported, and "
                     "every step compiles exactly once (nightly gate)")
+    ap.add_argument("--overlap-gate", action="store_true",
+                    help="fail the run unless the pipelined "
+                    "dispatch/harvest overlap keeps the oversubscribed "
+                    "(preempt+swap) trace's tokens/s within "
+                    "--overlap-tolerance of the never-preempted run, "
+                    "measures overlap ratio > 0, stays bitwise identical "
+                    "to both the big-pool run and a --no-overlap replay, "
+                    "and compiles every step exactly once (nightly gate)")
+    ap.add_argument("--overlap-tolerance", type=float, default=0.05,
+                    help="tokens/s fraction the oversubscribed overlap "
+                    "run may lose to the never-preempted run before "
+                    "--overlap-gate fails")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="run every scheduler with the pipelined "
+                    "dispatch/harvest overlap disabled (the synchronous "
+                    "pre-PR-10 step loop); the --overlap-gate compare "
+                    "constructs its own on/off pair regardless")
     ap.add_argument("--slo", action="store_true",
                     help="also replay a Poisson-arrival mixed-SLO trace "
                     "(deadline-free background + interactive TTFT/ITL "
@@ -816,6 +1000,7 @@ def main(argv=None):
         "fused": Scheduler(cfg, packed, cass=cass, ecfg=ecfg,
                            num_slots=args.slots, s_max=s_max,
                            rt_extra=rt_extra, fused=True,
+                           overlap=not args.no_overlap,
                            max_prefill_tokens_per_step=(
                                args.max_prefill_tokens_per_step)),
         "alternating": Scheduler(cfg, packed, cass=cass, ecfg=ecfg,
@@ -864,6 +1049,9 @@ def main(argv=None):
     if args.oversub or args.swap_gate:
         report["oversub_compare"] = run_oversub_compare(
             cfg, packed, cass, ecfg, args, rt_extra)
+    if args.overlap_gate:
+        report["overlap_compare"] = run_overlap_compare(
+            cfg, packed, cass, ecfg, args, rt_extra)
     if args.slo or args.slo_gate:
         report["slo_compare"] = run_slo_compare(
             cfg, packed, cass, ecfg, args, rt_extra)
@@ -907,6 +1095,8 @@ def main(argv=None):
     if args.prefix_gate and not report["prefix_compare"]["passed"]:
         raise SystemExit(1)
     if args.swap_gate and not report["oversub_compare"]["passed"]:
+        raise SystemExit(1)
+    if args.overlap_gate and not report["overlap_compare"]["passed"]:
         raise SystemExit(1)
     if args.slo_gate and not report["slo_compare"]["passed"]:
         raise SystemExit(1)

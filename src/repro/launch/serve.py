@@ -157,6 +157,12 @@ def run(argv=None):
     ap.add_argument("--alternating", action="store_true",
                     help="use the prefill/decode-alternating scheduler "
                     "(the fused mixed-role step is the default)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the pipelined dispatch/harvest overlap "
+                    "(one-cycle-deep async pipeline, default-on in fused "
+                    "mode): every step then blocks synchronously before "
+                    "the host plans the next cycle. Lossless either way "
+                    "— same tokens, overlap on or off")
     ap.add_argument("--max-prefill-tokens-per-step", type=int, default=None,
                     help="fused mode: cap prefill tokens per mixed cycle "
                     "so admission bursts can't monopolise a cycle")
@@ -286,6 +292,7 @@ def run(argv=None):
                           swap_store_blocks=args.swap_store_blocks,
                           slo_aware=not args.fifo,
                           attn_kernel=args.attn_kernel,
+                          overlap=not args.no_overlap,
                           telemetry=telem)
         t0 = time.perf_counter()
         for i in range(args.requests):

@@ -13,6 +13,16 @@ compile bucket IS the token bucket. ``Scheduler._stamp_wall`` feeds one
 observation per device step, so the fit refreshes online as cycles
 retire.
 
+The pipelined scheduler (``overlap=True``) stamps walls at *harvest*,
+not dispatch, and splits each observation three ways: the base bucket
+name (``unified``) keeps the *effective* cost — host dispatch time plus
+whatever device wait was NOT hidden behind host work — while
+``unified.dispatch`` and ``unified.overlap`` book the enqueue time and
+the hidden device time separately. Only the base names appear in
+``DECODE_BUCKETS``, so the suffixed buckets are pure telemetry: they
+feed the Perfetto dispatch track and the derived ``overlap_ratio``
+metric without ever polluting the cycle_ms fit the deadline math uses.
+
 Cold start falls back to the cycle-unit model the planner used before
 SLOs existed: every bucket costs ``nominal_cycle_ms`` (default 1.0), so
 ``ms_to_cycles`` degrades to the identity and deadline math in ms reads

@@ -437,6 +437,19 @@ def unified_step(rt: Runtime, params, cache: dict, cur_tokens: jax.Array,
     scheduler's frozen riders included, since PR 1), not specific to
     mixed roles. Keep ``moe_capacity_factor`` high enough that overflow
     never fires if bitwise serving parity on MoE archs matters.
+
+    **Deferred-harvest contract** (the scheduler's dispatch/harvest
+    pipeline leans on it): of this step's jitted outputs only the cache
+    is donated, so the ``res``/``last`` handles a dispatch returns stay
+    valid across the NEXT cycle's dispatch — the scheduler may hold
+    them a full cycle and ``device_get`` late. All outputs of one
+    executable materialize together, so blocking on any single handle
+    (``res.tokens``) at harvest proves the whole cycle — KV commits and
+    the ``length`` advance included — has landed. ``commit`` advancing
+    ``length`` by ``n+1`` in-step is what makes the device cache
+    self-sufficient: a free-running dispatch can chain ``cur`` off the
+    previous ``res.next_token`` handle with NO host push of lengths,
+    and the verify still reads exactly the committed prefix.
     """
     rt_t = dataclasses.replace(rt, view="target" if rt.cass else "plain")
     draft_tokens, draft_logits, key = _run_drafts(rt, params, cache,

@@ -292,6 +292,23 @@ def restore_pool_blocks(cache: dict, blocks: jax.Array, data: list) -> dict:
     return out
 
 
+def restore_pool_blocks_marked(cache: dict, blocks: jax.Array,
+                               data: list) -> tuple[dict, jax.Array]:
+    """``restore_pool_blocks`` plus a scalar completion *marker*.
+
+    The marker (count of real, non-trash restore entries) is a tiny
+    output of the SAME jit executable as the scatter: one XLA
+    computation's results all become ready together, so
+    ``block_until_ready(marker)`` proves the whole restore — H2D
+    transfer included — has landed without touching (or transferring)
+    any cache leaf. The synchronous scheduler blocks on it immediately
+    to stamp a truthful restore wall; the pipelined scheduler defers
+    that block to its next harvest, by which time the restore has
+    overlapped the following fused step and the wait is ~zero."""
+    out = restore_pool_blocks(cache, blocks, data)
+    return out, jnp.sum(blocks != TRASH_BLOCK)
+
+
 def append_paged_batched(store, new_store, table: jax.Array,
                          at: jax.Array) -> dict:
     """Scatter per-row token runs into the block pool through the table.

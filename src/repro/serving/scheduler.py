@@ -68,6 +68,29 @@ multiplexes a request queue through one jit'd serving step per cycle.
 * **Retirement** — per-row early exit on ``max_new``, the global
   ``eos_id``, or any of the request's own ``stop_tokens``; the slot (and
   its blocks, when paged) is freed immediately for the next request.
+* **Async overlap** (``overlap=True``, fused mode's default) — the
+  serving loop is a one-cycle-deep dispatch/harvest pipeline. Each
+  ``step()`` dispatches cycle N and defers its ``device_get`` to the
+  top of call N+1 (a ``PendingCycle`` record carries the plan, the
+  step's non-donated device result handles, and the wall stamps), so
+  host planning + harvest of cycle N−1 run while the device works. Two
+  regimes keep it lossless: whenever a scheduling decision could read
+  stale state (queued requests, prefilling rows, pending CoW, non-greedy
+  sampling) the call *drains* first — harvest precedes admission, so
+  every decision sees exactly the synchronous state and pipelining is
+  purely across the call boundary. On pure-decode stretches the call
+  *free-runs*: it dispatches first, chaining ``cur`` device-side off the
+  pending cycle's ``next_token`` handle with the device-authoritative
+  ``length`` (committed by ``engine.commit`` in-step), then harvests the
+  previous cycle in the shadow of the new dispatch. A retire decision
+  that lands one cycle late makes the retired row a *zombie* for one
+  already-dispatched cycle — its results are discarded at harvest,
+  never delivered (outputs stay bitwise identical to ``overlap=False``
+  at zero extra recompiles; the only cost is one trailing zombie cycle
+  when the pool empties). Spill/restore copies double-buffer against the
+  next fused step (``SpillStore.put_async`` + a restore completion
+  marker, both landed at the next harvest), and the next prefill
+  chunk's operands are staged on device during the current verify.
 * **Latency accounting** — every delivered token records its commit
   cycle and wall time, so ``summary()`` reports TTFT and p50/p95
   inter-token latency (the fused-vs-alternating headline in
@@ -187,6 +210,31 @@ class CyclePlan:
     decoding: list
 
 
+@dataclasses.dataclass
+class PendingCycle:
+    """One dispatched-but-unharvested serving cycle — the depth-1 record
+    of the dispatch/harvest pipeline.
+
+    ``res``/``last`` are the step's *device* result handles. They are
+    non-donated jit outputs (the cache is the only donated operand), so
+    they stay valid across the next cycle's dispatch; all outputs of one
+    executable materialize together, so blocking on any one of them at
+    harvest proves the whole cycle — KV commits included — has landed.
+    ``clock`` is the scheduler clock at dispatch: every harvest-side
+    stamp (token cycles, retirement, tracer events) uses it, so deferred
+    harvests book to the cycle that produced them, exactly like the
+    synchronous path."""
+    kind: str                   # "unified" | "chunk" (wide admission)
+    plan: CyclePlan | None      # unified cycles
+    prefilling: list            # chunk cycles: rows fed this chunk
+    valid: np.ndarray | None    # chunk cycles: per-slot token counts
+    res: object                 # unified: SpecResult device handles
+    last: object                # last-position logits device handle
+    clock: float                # scheduler clock at dispatch
+    t0: float                   # perf_counter at dispatch start
+    t_dispatch: float           # perf_counter when dispatch returned
+
+
 def _freeze_rows(cache0: dict, cache: dict, active: jax.Array) -> dict:
     """Pin per-row live state of rows not active in this step.
 
@@ -263,6 +311,7 @@ class Scheduler:
                  swap_store_blocks: int | None = None,
                  slo_aware: bool = True,
                  attn_kernel: str = "off",
+                 overlap: bool = True,
                  debug_invariants: int | None = None,
                  telemetry: Telemetry | None = None):
         if cfg.frontend:
@@ -291,6 +340,10 @@ class Scheduler:
             swap=swap, swap_store_blocks=swap_store_blocks,
             attn_kernel=attn_kernel)
         self.attn_kernel = attn_kernel
+        # one-cycle-deep dispatch/harvest pipelining (async overlap).
+        # Like ``fused`` it degrades silently: the alternating and
+        # autoregressive baselines stay synchronous.
+        self.overlap = overlap and self.fused
         if paged:
             self.max_blocks = blocks_needed(s_max, block_size)
             # default pool: capacity-equivalent to the slot layout (+trash)
@@ -369,7 +422,10 @@ class Scheduler:
         def counted_restore(cache, blocks, data):
             self.trace_counts["restore"] = (
                 self.trace_counts.get("restore", 0) + 1)
-            return KC.restore_pool_blocks(cache, blocks, data)
+            # -> (cache, marker): the marker is a scalar output of the
+            # SAME executable as the scatter, so blocking on it proves
+            # the restore landed without syncing any cache leaf
+            return KC.restore_pool_blocks_marked(cache, blocks, data)
         # preemption's device<->host transfer halves: ``blocks`` is a
         # traced (max_blocks,) vector padded with trash entries, so every
         # spill/restore of any real size shares ONE compile bucket each
@@ -420,6 +476,14 @@ class Scheduler:
         self._slo_seen = False      # any request this run declared an SLO
         self.prefix: PrefixCache | None = None
         self._pending_cow: list[tuple[int, int]] = []
+        # pipeline state: the one-cycle-deep pending record, the staged
+        # next-chunk device operands, and deferred spill/restore
+        # completions awaiting their harvest-point stamp. reset()
+        # DISCARDS them (device handles just drop) — a fresh run never
+        # harvests the previous run's in-flight cycle.
+        self._pending: PendingCycle | None = None
+        self._prefetch: tuple | None = None
+        self._inflight: list[tuple] = []
         if self.paged:
             if prev_pool is not None and prev_prefix is not None:
                 # persist the radix index across reset (ROADMAP
@@ -468,6 +532,7 @@ class Scheduler:
         self.metrics.set_config("attn_kernel", self.attn_kernel)
         self.metrics.set_config("fused", self.fused)
         self.metrics.set_config("speculative", self.speculative)
+        self.metrics.set_config("overlap", self.overlap)
 
     def reset(self) -> None:
         """Clear queue/slots/stats for a fresh run reusing the compiled
@@ -628,14 +693,29 @@ class Scheduler:
                 chain.slice_blocks(matched, chain.n_blocks,
                                    self.max_blocks))
             t0 = time.perf_counter()
-            self.cache = self._restore(self.cache, jnp.asarray(vec), data)
-            # the restore is async-dispatched; block on one output of
-            # the executable so the stamped wall time covers the real
-            # host->device transfer + scatter (the cost-model seed the
-            # other buckets measure), not just dispatch
-            # speclint: disable=sync-block(stamp the restore, not its dispatch)
-            jax.block_until_ready(self.cache["length"])
-            self._stamp_wall("restore", t0)
+            self.cache, marker = self._restore(self.cache,
+                                               jnp.asarray(vec), data)
+            if self.overlap:
+                # double-buffered restore: no wait here — the H2D copy
+                # + scatter overlap the fused step this admission rides
+                # (dispatched after it, so program order guarantees the
+                # step reads restored blocks). The completion marker is
+                # blocked on — and the full wall stamped — at the next
+                # harvest point.
+                self._stamp_wall("restore.dispatch", t0)
+                self._inflight.append(
+                    ("restore", marker, time.perf_counter() - t0,
+                     self.clock))
+            else:
+                # the restore is async-dispatched; block on the
+                # executable's scalar completion marker — NOT a cache
+                # leaf — so the stamped wall covers the real
+                # host->device transfer + scatter (the cost-model seed
+                # the other buckets measure) without transferring or
+                # pinning the whole cache
+                # speclint: disable=sync-block(stamp the restore completion marker, not its dispatch)
+                jax.block_until_ready(marker)
+                self._stamp_wall("restore", t0)
             self.tracer.emit(TM.RESTORE, rid=req.rid, slot=slot,
                              cycle=self.clock, args=(restore_n,))
         self.row_blocks[slot] = blocks
@@ -846,9 +926,24 @@ class Scheduler:
         t0 = time.perf_counter()
         bytes_before = self.spill.nbytes
         data = self._spill(self.cache, jnp.asarray(vec))
-        self.spill.put(key, data, n_res, length=int(self.lengths[slot]),
-                       pos=victim.pos, cur=int(self.cur[slot, 0]))
-        self._stamp_wall("spill", t0)
+        if self.overlap:
+            # double-buffered spill: stage the gather's device handles
+            # (its output buffer is separate from the cache, and any
+            # later step that rewrites the freed blocks is dispatched
+            # after it — program order makes block reuse race-free);
+            # the device_get lands at the next harvest point.
+            self.spill.put_async(key, data, n_res,
+                                 length=int(self.lengths[slot]),
+                                 pos=victim.pos,
+                                 cur=int(self.cur[slot, 0]))
+            self._stamp_wall("spill.dispatch", t0)
+            self._inflight.append(
+                ("spill", key, time.perf_counter() - t0, self.clock))
+        else:
+            self.spill.put(key, data, n_res,
+                           length=int(self.lengths[slot]),
+                           pos=victim.pos, cur=int(self.cur[slot, 0]))
+            self._stamp_wall("spill", t0)
         self.tracer.emit(TM.SPILL, rid=victim.rid, slot=slot,
                          cycle=self.clock,
                          args=(n_res, self.spill.nbytes - bytes_before))
@@ -984,7 +1079,9 @@ class Scheduler:
 
     # -- retirement --------------------------------------------------------
 
-    def _maybe_retire(self, req: Request) -> None:
+    def _maybe_retire(self, req: Request, cycle: float | None = None
+                      ) -> None:
+        cyc = self.clock if cycle is None else cycle
         # never deliver past max_new, even when a stop lands beyond it
         capped = req.output[:req.max_new]
         stops = set(req.stop_tokens)
@@ -1001,9 +1098,9 @@ class Scheduler:
         # truncation also drops the trimmed tokens' latency samples
         req.token_cycles = req.token_cycles[:len(req.output)]
         req.token_walls = req.token_walls[:len(req.output)]
-        req.state, req.finished_at = FINISHED, self.clock
+        req.state, req.finished_at = FINISHED, cyc
         self.tracer.emit(TM.RETIRE, rid=req.rid, slot=req.slot,
-                         cycle=self.clock, args=(len(req.output),))
+                         cycle=cyc, args=(len(req.output),))
         self.slots[req.slot] = None
         if self.paged:
             # refcounted release: blocks shared with other rows stay live,
@@ -1023,42 +1120,56 @@ class Scheduler:
         Intervals are taken off ``time.perf_counter()`` (the monotonic
         clock): an NTP step across ``time.time()`` would make
         ``bucket_wall_ms`` negative and poison the cost model."""
-        dt = time.perf_counter() - t0
-        self.metrics.observe_wall(name, dt)
-        self.tracer.emit(TM.STEP, cycle=self.clock, args=(name, dt * 1e3))
+        self._stamp_wall_at(name, time.perf_counter() - t0)
 
-    def _record_tokens(self, req: Request, k: int) -> None:
-        """Stamp ``k`` just-committed tokens with this cycle's end time.
+    def _stamp_wall_at(self, name: str, dt: float,
+                       cycle: float | None = None) -> None:
+        """``_stamp_wall`` with a pre-computed interval and an explicit
+        cycle: the pipelined harvest books a cycle's walls one call
+        late, so the stamps carry the *dispatch-time* clock, keeping the
+        trace and the per-cycle views aligned with the synchronous
+        path."""
+        self.metrics.observe_wall(name, dt)
+        self.tracer.emit(TM.STEP,
+                         cycle=self.clock if cycle is None else cycle,
+                         args=(name, dt * 1e3))
+
+    def _record_tokens(self, req: Request, k: int,
+                       cycle: float | None = None) -> None:
+        """Stamp ``k`` just-committed tokens with their cycle's end time.
         perf_counter, not epoch time: the stamps are only ever diffed
         into inter-token gaps, which must stay non-negative."""
         now = time.perf_counter()
-        req.token_cycles.extend([self.clock + 1.0] * k)
+        cyc = self.clock if cycle is None else cycle
+        req.token_cycles.extend([cyc + 1.0] * k)
         req.token_walls.extend([now] * k)
 
     def _harvest_decode_row(self, req: Request, tokens: np.ndarray,
                             valid: np.ndarray, n: np.ndarray,
-                            nxt: np.ndarray) -> None:
+                            nxt: np.ndarray,
+                            cycle: float | None = None) -> None:
         """Fold one decode row's cycle results into the request: extend
         its output with the accepted run, stamp the tokens, advance the
         host length by n+1, and retire if a stop condition landed. Shared
         by the fused and alternating paths — retirement/accounting fixes
-        apply to both (the losslessness tests compare them)."""
+        apply to both (the losslessness tests compare them). ``cycle``
+        is the results' dispatch-time clock (deferred harvests)."""
         slot = req.slot
         before = len(req.output)
         req.output.extend(tokens[slot][valid[slot]].tolist())
-        self._record_tokens(req, len(req.output) - before)
+        self._record_tokens(req, len(req.output) - before, cycle=cycle)
         self.lengths[slot] += int(n[slot]) + 1
         self.cur[slot, 0] = nxt[slot]
         if self.speculative:
             # per-cycle acceptance-length histogram: THE control input
             # every adaptive-γ method hangs off (k ∈ [0, γ])
             self.metrics.observe("acceptance_len", int(n[slot]))
-        self._maybe_retire(req)
+        self._maybe_retire(req, cycle=cycle)
         # delivered tokens only: retirement truncates past stops/max_new
         delivered = len(req.output) - before
         self.metrics.inc("committed", delivered)
         self.tracer.emit(TM.CYCLE, rid=req.rid, slot=slot,
-                         cycle=self.clock,
+                         cycle=self.clock if cycle is None else cycle,
                          args=(self.ecfg.gamma if self.speculative else 0,
                                int(n[slot]), delivered))
 
@@ -1126,7 +1237,7 @@ class Scheduler:
         if self.paged:
             self.cache["block_table"] = jnp.asarray(self.table)
 
-    def _track_residency(self) -> None:
+    def _track_residency(self, cycle: float | None = None) -> None:
         resident = int(sum(self.lengths[r.slot] for r in self.slots
                            if r is not None))
         self.metrics.gauge_max("peak_resident_tokens", resident)
@@ -1152,7 +1263,9 @@ class Scheduler:
             # counter-track sample for the Perfetto export — host ints
             # off the allocator's dict sizes, zero device traffic
             occ = self.pool.occupancy() if self.paged else None
-            self.tracer.emit(TM.COUNTERS, cycle=self.clock, args=(
+            self.tracer.emit(TM.COUNTERS,
+                             cycle=self.clock if cycle is None else cycle,
+                             args=(
                 resident,
                 occ["allocated"] if occ else 0,
                 occ["parked"] if occ else 0,
@@ -1161,8 +1274,10 @@ class Scheduler:
 
     # -- prefill -----------------------------------------------------------
 
-    def _prefill_cycle(self, prefilling: list[Request]) -> None:
-        """One chunk of every prefilling row, batched in one bucket."""
+    def _dispatch_wide(self, prefilling: list[Request]) -> PendingCycle:
+        """Dispatch one wide (``chunk_size``) admission cycle: a chunk
+        of every prefilling row, batched in one bucket. Returns the
+        un-harvested cycle record (handles only — no sync here)."""
         c = self.chunk_size
         tokens = np.zeros((self.num_slots, c), np.int32)
         valid = np.zeros(self.num_slots, np.int32)
@@ -1177,29 +1292,47 @@ class Scheduler:
         last, self.cache = self._chunk(self.params, self.cache,
                                        jnp.asarray(tokens),
                                        jnp.asarray(valid))
-        last = jax.device_get(last)
-        self._stamp_wall("chunk", t0)
-        for r in prefilling:
-            v = int(valid[r.slot])
+        return PendingCycle(kind="chunk", plan=None,
+                            prefilling=list(prefilling), valid=valid,
+                            res=None, last=last, clock=self.clock,
+                            t0=t0, t_dispatch=time.perf_counter())
+
+    def _harvest_wide(self, p: PendingCycle) -> None:
+        """Fold one wide admission cycle's materialized logits into host
+        state (row advance, prefix indexing, prefill completion)."""
+        last = jax.device_get(p.last)
+        for r in p.prefilling:
+            v = int(p.valid[r.slot])
             r.pos += v
             self.lengths[r.slot] += v
             self.metrics.inc("prefill_tokens", v)
             self.tracer.emit(TM.PREFILL_CHUNK, rid=r.rid, slot=r.slot,
-                             cycle=self.clock, args=(v, r.pos))
+                             cycle=p.clock, args=(v, r.pos))
             self._index_prefix(r)
             if r.pos >= len(r.tokens):
-                self._finish_prefill(r, last[r.slot])
+                self._finish_prefill(r, last[r.slot], cycle=p.clock)
         self.metrics.inc("prefill_cycles")
 
-    def _finish_prefill(self, req: Request, last_logits: np.ndarray) -> None:
+    def _prefill_cycle(self, prefilling: list[Request]) -> None:
+        """One chunk of every prefilling row — the synchronous shape:
+        dispatch, block, harvest in place (alternating mode and the
+        ``overlap=False`` fused wide path)."""
+        p = self._dispatch_wide(prefilling)
+        # speclint: disable=sync-block(the one sanctioned per-cycle sync)
+        jax.block_until_ready(p.last)
+        self._stamp_wall("chunk", p.t0)
+        self._harvest_wide(p)
+
+    def _finish_prefill(self, req: Request, last_logits: np.ndarray,
+                        cycle: float | None = None) -> None:
         """Prompt exhausted: its last-position logits yield the first
         generated token; the row becomes a decode row next cycle."""
         first = int(np.argmax(last_logits))
         req.prefill_done = True
         req.output = [first]
-        self._record_tokens(req, 1)
+        self._record_tokens(req, 1, cycle=cycle)
         self.cur[req.slot, 0] = first
-        self._maybe_retire(req)
+        self._maybe_retire(req, cycle=cycle)
 
     # -- planner (fused mode) ----------------------------------------------
 
@@ -1291,8 +1424,101 @@ class Scheduler:
         stall_ms = len(plan.decoding) * self.cost.bucket_ms("chunk")
         return ride_ms > stall_ms
 
+    def _dispatch_unified(self, plan: CyclePlan,
+                          stale: bool = False) -> PendingCycle:
+        """Dispatch one planned mixed-role cycle via ``unified_step``
+        and return its un-harvested record (no sync — result handles
+        only).
+
+        ``stale=True`` is the free-run dispatch: host state is one
+        un-harvested cycle behind, so ``cur`` chains device-side off the
+        pending cycle's ``next_token`` handle (same (B,1) int32 aval —
+        same compile bucket), ``cache["length"]`` is left untouched
+        (``engine.commit`` already advanced it in-step: the device is
+        authoritative), and decode rows grow blocks conservatively — the
+        stale length plus TWO decode horizons covers the in-flight
+        commit (≤ γ+1) plus the next verify, capped at the row's
+        worst-case reservation so allocation can never fail."""
+        horizon = self.ecfg.gamma + 1
+        if self.paged:
+            for r in plan.prefilling:
+                self._grow_blocks(r, r.pos + int(plan.prefill_valid[r.slot]))
+            for r in plan.decoding:
+                need = (min(int(self.lengths[r.slot]) + 2 * horizon,
+                            self._worst_case_tokens(len(r.tokens),
+                                                    r.max_new))
+                        if stale else
+                        int(self.lengths[r.slot]) + horizon)
+                self._grow_blocks(r, need)
+        if stale:
+            # push only the table; length stays device-authoritative
+            if self.paged:
+                self.cache["block_table"] = jnp.asarray(self.table)
+            cur = self._pending.res.next_token[:, None]
+        else:
+            self._push_host_state()
+            cur = jnp.asarray(self.cur)
+        self.key, sub = jax.random.split(self.key)
+        chunk_dev, valid_dev = self._take_prefetch(plan)
+        t0 = time.perf_counter()
+        res, last, self.cache = self._unified(
+            self.params, self.cache, cur, chunk_dev, valid_dev,
+            jnp.asarray(plan.decode_mask), sub)
+        pending = PendingCycle(kind="unified", plan=plan, prefilling=[],
+                               valid=None, res=res, last=last,
+                               clock=self.clock, t0=t0,
+                               t_dispatch=time.perf_counter())
+        self._prefetch_next_chunk(plan)
+        return pending
+
+    def _harvest_unified(self, plan: CyclePlan, res, last,
+                         cycle: float) -> None:
+        """Fold one fused cycle's materialized results into host state.
+        ``cycle`` is the harvested cycle's dispatch-time clock (== the
+        live clock on the synchronous path). A row that retired between
+        the cycle's dispatch and its harvest (pipelined free-run: the
+        retire decision arrived one cycle late) is a *zombie* — its
+        extra cycle's results are discarded here, never delivered, and
+        it contributes nothing to acceptance accounting."""
+        # harvest prefill rows
+        if plan.prefilling:
+            last = jax.device_get(last)
+            for r in plan.prefilling:
+                v = int(plan.prefill_valid[r.slot])
+                r.pos += v
+                self.lengths[r.slot] += v
+                self.metrics.inc("prefill_tokens", v)
+                self.tracer.emit(TM.PREFILL_CHUNK, rid=r.rid, slot=r.slot,
+                                 cycle=cycle, args=(v, r.pos))
+                self._index_prefix(r)
+                if r.pos >= len(r.tokens):
+                    self._finish_prefill(r, last[r.slot], cycle=cycle)
+            self.metrics.inc("prefill_cycles")
+            self.metrics.inc("mixed_cycles")
+            self.metrics.gauge_max("peak_prefill_tokens_per_cycle",
+                                   int(plan.prefill_valid.sum()))
+        # harvest decode rows — ONE batched transfer for the cycle's
+        # results, not four implicit per-array syncs
+        live = [r for r in plan.decoding if r.state != FINISHED]
+        if len(live) < len(plan.decoding):
+            # zombie rows: retired at the previous harvest AFTER this
+            # cycle was already dispatched (free-run) — their results
+            # are discarded, the rollback the late-retire test pins
+            self.metrics.inc("zombie_rows", len(plan.decoding) - len(live))
+        if live:
+            tokens, valid, n, nxt = jax.device_get(
+                (res.tokens, res.valid, res.n_accepted, res.next_token))
+            for r in live:
+                self._harvest_decode_row(r, tokens, valid, n, nxt,
+                                         cycle=cycle)
+            lmask = np.zeros(self.num_slots, bool)
+            lmask[[r.slot for r in live]] = True
+            self.metrics.inc("accepted", int(n[lmask].sum()))
+            self.metrics.inc("drafted", self.ecfg.gamma * len(live))
+
     def _fused_step(self) -> bool:
-        """Execute one planned mixed-role cycle via ``unified_step``."""
+        """Execute one planned mixed-role cycle via ``unified_step`` —
+        the synchronous shape: dispatch, block, harvest in place."""
         plan = self._plan_cycle()
         if plan is None:
             return self._fast_forward()
@@ -1308,54 +1534,175 @@ class Scheduler:
             self.metrics.inc("cycles")
             self.clock += 1.0
             return True
-        if self.paged:
-            for r in plan.prefilling:
-                self._grow_blocks(r, r.pos + int(plan.prefill_valid[r.slot]))
-            for r in plan.decoding:
-                self._grow_blocks(r, int(self.lengths[r.slot])
-                                  + self.ecfg.gamma + 1)
-        self._push_host_state()
-        self.key, sub = jax.random.split(self.key)
-        t0 = time.perf_counter()
-        res, last, self.cache = self._unified(
-            self.params, self.cache, jnp.asarray(self.cur),
-            jnp.asarray(plan.chunk_tokens), jnp.asarray(plan.prefill_valid),
-            jnp.asarray(plan.decode_mask), sub)
+        p = self._dispatch_unified(plan)
         # the cycle's one sanctioned sync: bound the step-wall stamp at
         # the step's completion, before the host-side harvest
         # speclint: disable=sync-block(the one sanctioned per-cycle sync)
-        jax.block_until_ready(res.tokens)
-        self._stamp_wall("unified", t0)
-        # harvest prefill rows
-        if plan.prefilling:
-            last = jax.device_get(last)
-            for r in plan.prefilling:
-                v = int(plan.prefill_valid[r.slot])
-                r.pos += v
-                self.lengths[r.slot] += v
-                self.metrics.inc("prefill_tokens", v)
-                self.tracer.emit(TM.PREFILL_CHUNK, rid=r.rid, slot=r.slot,
-                                 cycle=self.clock, args=(v, r.pos))
-                self._index_prefix(r)
-                if r.pos >= len(r.tokens):
-                    self._finish_prefill(r, last[r.slot])
-            self.metrics.inc("prefill_cycles")
-            self.metrics.inc("mixed_cycles")
-            self.metrics.gauge_max("peak_prefill_tokens_per_cycle",
-                                   int(plan.prefill_valid.sum()))
-        # harvest decode rows — ONE batched transfer for the cycle's
-        # results, not four implicit per-array syncs
-        if plan.decoding:
-            tokens, valid, n, nxt = jax.device_get(
-                (res.tokens, res.valid, res.n_accepted, res.next_token))
-            for r in plan.decoding:
-                self._harvest_decode_row(r, tokens, valid, n, nxt)
-            dmask = plan.decode_mask
-            self.metrics.inc("accepted", int(n[dmask].sum()))
-            self.metrics.inc("drafted", self.ecfg.gamma * int(dmask.sum()))
+        jax.block_until_ready(p.res.tokens)
+        self._stamp_wall("unified", p.t0)
+        self._harvest_unified(plan, p.res, p.last, self.clock)
         self._track_residency()
         self.metrics.inc("cycles")
         self.clock += 1.0
+        return True
+
+    # -- pipelined dispatch/harvest (async overlap) --------------------------
+
+    def _free_run_ok(self) -> bool:
+        """May this call dispatch BEFORE harvesting the pending cycle
+        (the regime with real overlap: planning from one-cycle-stale
+        host state, chaining ``cur`` device-side)? Only on pure-decode
+        stretches where stale planning is provably schedule-neutral: no
+        queued request (no admission or preemption decision could read
+        stale state), every resident row past prefill, the pending cycle
+        itself pure decode, no copy-on-write owed, and greedy sampling
+        (a late retire costs one zombie cycle and therefore one extra
+        key split; greedy outputs are key-independent, non-greedy ones
+        are not, so non-greedy always drains). Rows within γ+1 tokens of
+        their ``max_new`` cap drain too: the pending harvest may retire
+        them, and dispatching first would waste the retired row's cycle
+        — predictable (cap-driven) retires are anticipated, so zombies
+        only arise from retires no stale planner could foresee (EOS or
+        a per-request stop token landing mid-stretch). Everything else
+        drains first — still pipelined across the call boundary, but
+        every scheduling decision sees exactly the synchronous state."""
+        p = self._pending
+        horizon = self.ecfg.gamma + 1
+        return (p is not None and p.kind == "unified"
+                and not p.plan.prefilling
+                and not self.queue
+                and not self._pending_cow
+                and self.ecfg.greedy
+                and all(r is None or (r.prefill_done
+                                      and len(r.output) + horizon
+                                      < r.max_new)
+                        for r in self.slots))
+
+    def _harvest_pending(self) -> None:
+        """Land the pending cycle: block on one result handle (the
+        pipeline's one sanctioned sync, one cycle late — the device has
+        been working on it since dispatch), split the wall stamps into
+        dispatch / effective-step / overlapped-host components, fold the
+        results into host state, and finalize in-flight spill/restore
+        transfers. No-op when nothing is pending."""
+        p, self._pending = self._pending, None
+        # speclint: disable=sync-truthy(None-check on the PendingCycle record itself, no device value is read)
+        if p is None:
+            return
+        out = p.res.tokens if p.kind == "unified" else p.last
+        t_h = time.perf_counter()
+        # speclint: disable=sync-block(the one sanctioned per-cycle sync, deferred to harvest)
+        jax.block_until_ready(out)
+        now = time.perf_counter()
+        dispatch_dt = p.t_dispatch - p.t0
+        name = p.kind                   # wall bucket: "unified" | "chunk"
+        # effective device cost = dispatch + the non-overlapped wait.
+        # The overlapped host window is reported BESIDE the step bucket
+        # (".overlap"), never added to it, so the CostModel's per-bucket
+        # fits keep pricing real device cost, not pipeline bookkeeping.
+        self._stamp_wall_at(name + ".dispatch", dispatch_dt, p.clock)
+        self._stamp_wall_at(name, dispatch_dt + (now - t_h), p.clock)
+        self._stamp_wall_at(name + ".overlap", t_h - p.t_dispatch, p.clock)
+        # speclint: disable=sync-truthy(kind is a host string field of the pending record)
+        if p.kind == "unified":
+            self._harvest_unified(p.plan, p.res, p.last, p.clock)
+        else:
+            self._harvest_wide(p)
+        self._finalize_inflight()
+        self._track_residency(cycle=p.clock)
+
+    def _finalize_inflight(self) -> None:
+        """Land deferred spill/restore transfers at the harvest point
+        and stamp their effective walls (dispatch + residual wait — the
+        copies have overlapped the fused step since dispatch, so the
+        residual is ~zero; Perfetto shows their spans under the adjacent
+        fused-step span)."""
+        inflight, self._inflight = self._inflight, []
+        for kind, handle, dispatch_dt, cycle in inflight:
+            t0 = time.perf_counter()
+            # speclint: disable=sync-truthy(kind is the host string tag of the inflight tuple)
+            if kind == "spill":
+                self.spill.finalize(handle)
+            else:
+                # speclint: disable=sync-block(restore completion marker — narrow, not a cache sync)
+                jax.block_until_ready(handle)
+            self._stamp_wall_at(
+                kind, dispatch_dt + time.perf_counter() - t0, cycle)
+
+    def _take_prefetch(self, plan: CyclePlan):
+        """The fused step's chunk operands: the prefetched device
+        buffers when the staged prediction matches this plan exactly
+        (host-side numpy compare — never a correctness input), a fresh
+        H2D transfer otherwise."""
+        pf, self._prefetch = self._prefetch, None
+        # speclint: disable=sync-asarray(pf[0] is the host numpy copy staged beside the device buffers), sync-truthy(the match decision reads host numpy, never the device staging)
+        if (pf is not None and np.array_equal(pf[0], plan.chunk_tokens)
+                # speclint: disable=sync-asarray(pf[1] is the host numpy copy staged beside the device buffers)
+                and np.array_equal(pf[1], plan.prefill_valid)):
+            return pf[2], pf[3]
+        return (jnp.asarray(plan.chunk_tokens),
+                jnp.asarray(plan.prefill_valid))
+
+    def _prefetch_next_chunk(self, plan: CyclePlan) -> None:
+        """Stage the next cycle's predicted prefill-chunk operands on
+        device (async H2D) while the just-dispatched step runs. The
+        prediction replays the planner's budget walk one chunk ahead;
+        any plan change (admission, wide flip, retirement) simply fails
+        the match at the next dispatch and the buffers drop."""
+        if not self.overlap or not plan.prefilling:
+            self._prefetch = None
+            return
+        width = self.ecfg.gamma + 1
+        chunk = np.zeros((self.num_slots, width), np.int32)
+        valid = np.zeros(self.num_slots, np.int32)
+        budget = self.max_prefill_tokens_per_step
+        budget = budget if budget is not None else self.num_slots * width
+        staged = False
+        for slot, r in enumerate(self.slots):
+            if r is None or r.prefill_done or budget <= 0:
+                continue
+            pos = r.pos + (int(plan.prefill_valid[slot])
+                           if r in plan.prefilling else 0)
+            v = min(width, len(r.tokens) - pos, budget)
+            if v <= 0:
+                continue
+            chunk[slot, :v] = r.tokens[pos:pos + v]
+            valid[slot] = v
+            budget -= v
+            staged = True
+        self._prefetch = (chunk, valid, jnp.asarray(chunk),
+                          jnp.asarray(valid)) if staged else None
+
+    def _fused_step_pipelined(self) -> bool:
+        """One pipelined serving call. Drain regime: harvest the pending
+        cycle, admit, plan, dispatch — decisions bitwise match the
+        synchronous path, and the dispatch still overlaps the host work
+        up to the NEXT call's harvest. Free-run regime (pure decode):
+        plan from (one-cycle-stale) host state, dispatch first, then
+        harvest the previous cycle while the device runs the new one —
+        the real overlap window."""
+        free_run = self._free_run_ok()
+        if not free_run:
+            self._harvest_pending()
+            self._admit_ready()
+        plan = self._plan_cycle()
+        if plan is None:
+            # nothing to dispatch: drain whatever is still pending (a
+            # trailing zombie-only cycle after the last live row retired
+            # one harvest ago) before idling or fast-forwarding
+            self._harvest_pending()
+            return self._fast_forward()
+        if self._plan_wide_cycle(plan):
+            nxt = self._dispatch_wide(
+                [r for r in self.slots
+                 if r is not None and not r.prefill_done])
+        else:
+            nxt = self._dispatch_unified(plan, stale=free_run)
+        self.metrics.inc("cycles")
+        self.clock += 1.0
+        if free_run:
+            self._harvest_pending()
+        self._pending = nxt
         return True
 
     # -- invariants --------------------------------------------------------
@@ -1385,16 +1732,19 @@ class Scheduler:
     # -- decode ------------------------------------------------------------
 
     def step(self) -> bool:
-        """Admit what's ready, then run one serving cycle — a fused
-        mixed-role step (default), or the alternating prefill-chunk /
-        decode cycle (``fused=False`` and the autoregressive baseline).
-        Returns False when there was nothing to do (idle or all arrivals
-        in the future)."""
+        """Admit what's ready, then run one serving cycle — the
+        pipelined fused step (default: dispatch this cycle, harvest the
+        previous one), the synchronous fused step (``overlap=False``),
+        or the alternating prefill-chunk / decode cycle (``fused=False``
+        and the autoregressive baseline). Returns False when there was
+        nothing to do (idle or all arrivals in the future)."""
         if self.debug_invariants > 0 and self.paged:
             self._steps_since_check += 1
             if self._steps_since_check >= self.debug_invariants:
                 self._steps_since_check = 0
                 self.check_invariants()
+        if self.overlap:
+            return self._fused_step_pipelined()
         self._admit_ready()
         if self.fused:
             return self._fused_step()

@@ -26,6 +26,19 @@ on what survived in the cache.
 ``max_blocks`` caps host-side residency (the ``--swap-store-blocks``
 knob): the victim policy checks ``can_hold`` before preempting, so a
 full store means "stop preempting", never "drop a chain".
+
+Two ingest paths serve the scheduler's two regimes. ``put`` is the
+synchronous one: the device→host copy happens inside the call. In the
+pipelined scheduler (``overlap=True``) a preemption instead stages the
+chain with ``put_async`` — the gather's *device handles* are held (the
+slice is async-dispatched; byte/block accounting reads array metadata,
+never values) and the actual ``device_get`` is deferred to
+``finalize``, which the scheduler runs at its next harvest point — by
+then the copy has long overlapped the fused step that followed the
+preemption, so the blocking wait is ~zero. ``get``/``pop`` finalize on
+demand, so a victim that resumes before the next harvest still reads a
+complete host chain; every accounting view (``blocks``, ``nbytes``,
+``keys``, ``can_hold``) counts staged chains exactly like landed ones.
 """
 from __future__ import annotations
 
@@ -89,28 +102,34 @@ class SpillStore:
             raise ValueError("swap store cap must be >= 1 block")
         self.max_blocks = max_blocks
         self._chains: dict[object, SpilledChain] = {}
+        # chains staged by put_async whose device->host copy has not
+        # landed yet: data still holds device handles
+        self._pending: dict[object, SpilledChain] = {}
         self.peak_blocks = 0
         self.peak_bytes = 0
         self.total_spilled_blocks = 0
         self.total_restored_blocks = 0
 
     def __len__(self) -> int:
-        return len(self._chains)
+        return len(self._chains) + len(self._pending)
 
     def __contains__(self, key) -> bool:
-        return key in self._chains
+        return key in self._chains or key in self._pending
 
     def keys(self):
-        """Keys of every held chain (allocator<->store sync checks)."""
-        return self._chains.keys()
+        """Keys of every held chain, staged ones included
+        (allocator<->store sync checks)."""
+        return list(self._chains.keys()) + list(self._pending.keys())
 
     @property
     def blocks(self) -> int:
-        return sum(c.n_blocks for c in self._chains.values())
+        return (sum(c.n_blocks for c in self._chains.values())
+                + sum(c.n_blocks for c in self._pending.values()))
 
     @property
     def nbytes(self) -> int:
-        return sum(c.nbytes for c in self._chains.values())
+        return (sum(c.nbytes for c in self._chains.values())
+                + sum(c.nbytes for c in self._pending.values()))
 
     def snapshot(self) -> dict:
         """Gauge view for the metrics registry, spelled exactly as the
@@ -149,14 +168,58 @@ class SpillStore:
         self.peak_bytes = max(self.peak_bytes, self.nbytes)
         return chain
 
+    def put_async(self, key, data, n_blocks: int, *, length: int, pos: int,
+                  cur: int) -> SpilledChain:
+        """Stage one spilled chain without waiting for the device->host
+        copy. ``data`` is the *device* pytree from ``spill_pool_blocks``
+        — the trim to the real blocks is async-dispatched and the
+        handles are held until ``finalize`` (or a ``get``/``pop`` that
+        needs the bytes sooner). ``nbytes`` comes off array metadata,
+        so staging never syncs."""
+        if key in self:
+            raise ValueError(f"spill key {key!r} already stored")
+        if not self.can_hold(n_blocks):
+            raise ValueError(
+                f"spilling {n_blocks} blocks would exceed the swap "
+                f"store cap ({self.blocks}/{self.max_blocks} held)")
+        dev = jax.tree.map(lambda leaf: leaf[:, :n_blocks], data)
+        chain = SpilledChain(data=dev, n_blocks=n_blocks, length=length,
+                             pos=pos, cur=cur, nbytes=_tree_nbytes(dev))
+        self._pending[key] = chain
+        self.total_spilled_blocks += n_blocks
+        self.peak_blocks = max(self.peak_blocks, self.blocks)
+        self.peak_bytes = max(self.peak_bytes, self.nbytes)
+        return chain
+
+    def finalize(self, key=None) -> int:
+        """Land staged device->host copies (one chain, or all when
+        ``key`` is None). Returns the number of chains landed. Idempotent
+        — an already-landed (or absent) key is a no-op."""
+        stale = ([key] if key is not None and key in self._pending
+                 else list(self._pending) if key is None else [])
+        for k in stale:
+            chain = self._pending.pop(k)
+            chain.data = _tree_device_get(chain.data)
+            chain.nbytes = _tree_nbytes(chain.data)
+            # speclint: disable=leak-host-state(chain.data was landed host-side via device_get two lines up)
+            self._chains[k] = chain
+        return len(stale)
+
     def get(self, key) -> SpilledChain:
+        # speclint: disable=sync-truthy(membership test over host dict keys, no device value is read)
+        if key in self._pending:
+            self.finalize(key)
         return self._chains[key]
 
     def pop(self, key) -> SpilledChain:
         """Remove a chain after a successful restore (or abandonment)."""
+        # speclint: disable=sync-truthy(membership test over host dict keys, no device value is read)
+        if key in self._pending:
+            self.finalize(key)
         chain = self._chains.pop(key)
         self.total_restored_blocks += chain.n_blocks
         return chain
 
     def clear(self) -> None:
         self._chains.clear()
+        self._pending.clear()

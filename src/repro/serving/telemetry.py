@@ -242,6 +242,18 @@ class MetricsRegistry:
         s["histograms"] = {name: h.snapshot()
                            for name, h in sorted(self.hists.items())}
         s["bucket_wall_ms"] = self.wall_snapshot()
+        # pipelined-dispatch overlap ratio, derived from the wall store:
+        # ``<step>.overlap`` buckets hold the host time that ran in the
+        # shadow of an in-flight device step, their base buckets the
+        # effective (non-overlapped) step cost. None until some deferred
+        # harvest has stamped an overlap window (overlap off, or a run
+        # too short to leave the drain regime).
+        overlap_s = sum(t for name, (_, t) in self.walls.items()
+                        if name.endswith(".overlap"))
+        busy_s = sum(t for name, (_, t) in self.walls.items()
+                     if name + ".overlap" in self.walls)
+        s["overlap_ratio"] = (overlap_s / (overlap_s + busy_s)
+                              if overlap_s + busy_s > 0 else None)
         if self._cost is not None:
             s["cost_model"] = self._cost.snapshot()
         s["subsystems"] = dict(self.config)
@@ -276,6 +288,7 @@ class Telemetry:
 _PID = 1
 _TID_DEVICE = 2        # compiled device steps (one at a time)
 _TID_SPILL = 3         # preemption / spill subsystem instants
+_TID_DISPATCH = 4      # host dispatch + overlap spans (pipelined mode)
 _TID_SLOT0 = 10        # slot i -> tid 10 + i
 
 
@@ -291,9 +304,12 @@ def perfetto_trace(tracer: Tracer, process_name: str = "cassandra-serve"
     spans (``X`` complete events ADMIT→RETIRE/PREEMPT) with per-cycle
     instants (prefill chunks, draft/verify cycles with γ/k args); a
     device track of compiled-step spans (from STEP events, start
-    back-computed as end − duration); a spill track of
-    preempt/spill/restore instants; and counter tracks (``C``) for pool
-    occupancy, queue depth and per-cycle accepted tokens. Timestamps are
+    back-computed as end − duration); a dispatch track carrying the
+    pipelined scheduler's ``*.dispatch`` (host time to enqueue the
+    step) and ``*.overlap`` (device time hidden behind host work)
+    spans; a spill track of preempt/spill/restore instants; and counter
+    tracks (``C``) for pool occupancy, queue depth and per-cycle
+    accepted tokens. Timestamps are
     µs relative to the first event; events within a track are emitted in
     non-decreasing ``ts`` order."""
     events = tracer.events()
@@ -376,9 +392,12 @@ def perfetto_trace(tracer: Tracer, process_name: str = "cassandra-serve"
         elif kind == STEP:
             name, wall_ms = args
             dur = max(float(wall_ms) * 1e3, 0.0)       # ms -> us
-            put(_TID_DEVICE, {"name": name, "ph": "X",
-                              "ts": max(t - dur, 0.0), "dur": dur,
-                              "cat": "device", "args": {"cycle": cycle}})
+            pipelined = name.endswith((".dispatch", ".overlap"))
+            put(_TID_DISPATCH if pipelined else _TID_DEVICE,
+                {"name": name, "ph": "X",
+                 "ts": max(t - dur, 0.0), "dur": dur,
+                 "cat": "dispatch" if pipelined else "device",
+                 "args": {"cycle": cycle}})
         elif kind == COUNTERS:
             resident, allocated, parked, swapped, qdepth = args
             put_counter(t, "pool_blocks",
@@ -395,7 +414,8 @@ def perfetto_trace(tracer: Tracer, process_name: str = "cassandra-serve"
 
     out = [{"name": "process_name", "ph": "M", "pid": _PID,
             "args": {"name": process_name}}]
-    names = {_TID_DEVICE: "device steps", _TID_SPILL: "spill/preempt"}
+    names = {_TID_DEVICE: "device steps", _TID_SPILL: "spill/preempt",
+             _TID_DISPATCH: "dispatch/overlap"}
     for tid in sorted(tracks):
         label = names.get(tid, f"slot {tid - _TID_SLOT0}")
         out.append({"name": "thread_name", "ph": "M", "pid": _PID,
@@ -519,4 +539,13 @@ def format_stats_lines(s: dict, *, mode: str, wall_s: float,
             f"[kernel] attn={sub['attn_kernel']}, unified step "
             f"mean={uni['mean_ms']:.2f}ms over {uni['calls']} calls, "
             f"traces={s['trace_counts'].get('unified', 0)}")
+    if sub.get("overlap"):
+        ratio = s.get("overlap_ratio")
+        walls = s["bucket_wall_ms"]
+        disp = walls.get("unified.dispatch", {"calls": 0, "mean_ms": 0.0})
+        lines.append(
+            f"[overlap] pipelined dispatch/harvest on, ratio="
+            f"{'n/a' if ratio is None else format(ratio, '.2f')}, "
+            f"dispatch mean={disp['mean_ms']:.2f}ms over "
+            f"{disp['calls']} calls")
     return lines

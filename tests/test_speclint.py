@@ -168,5 +168,11 @@ def test_every_corpus_rule_is_registered():
 def test_real_tree_is_clean():
     report = run_speclint(["src", "benchmarks"], Config(), REPO_ROOT)
     assert report.clean, "\n".join(f.render() for f in report.findings)
-    # the two sanctioned block_until_ready sites carry reasons
-    assert report.suppressed == 2
+    # every suppression carries a reason: the sanctioned per-cycle sync
+    # in each regime (wide prefill, synchronous fused, deferred harvest),
+    # the restore completion markers (inline and in-flight), and the
+    # pipeline's host-side reads of the registered deferred-state attrs
+    # (PendingCycle fields, inflight tags, staged-prefetch numpy copies,
+    # spill-store pending-dict bookkeeping) — which hold no device
+    # values at the flagged expressions
+    assert report.suppressed == 12

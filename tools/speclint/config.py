@@ -74,8 +74,13 @@ class Config:
         "_restore", "_prefill", "_scatter",
         "paged_gqa", "paged_gqa_packed", "paged_mla",
         "decode_spec_pool"})
-    # the only ``self.`` attributes allowed to hold device arrays
-    device_self_attrs: frozenset = frozenset({"cache", "key"})
+    # the only ``self.`` attributes allowed to hold device arrays.
+    # ``_pending``/``_prefetch``/``_inflight`` are the PR 10 pipeline's
+    # deferred-harvest state: non-donated device handles held exactly
+    # one cycle (PendingCycle results, the staged prefill operands, and
+    # in-flight spill/restore markers), harvested at the next step.
+    device_self_attrs: frozenset = frozenset({
+        "cache", "key", "_pending", "_prefetch", "_inflight"})
     # telemetry record sinks (tracer/metrics emit APIs). These append to
     # host-authoritative state (the event ring, counter dicts) on the
     # serving hot path, so a traced argument is a deferred device sync:
